@@ -1,0 +1,196 @@
+"""§Roofline: three-term analysis per (arch × shape) from the dry-run.
+
+Terms (seconds, per step, per chip — TPU v5e constants):
+  compute    = FLOPs / 197e12           (bf16 MXU peak)
+  memory     = bytes_accessed / 819e9   (HBM bandwidth)
+  collective = Σ collective result bytes × op_factor / 50e9  (ICI per link)
+
+FLOPs / bytes / collectives come from the compiled per-device program, with
+two corrections (both validated empirically, see dryrun.py):
+  1. while-body scaling — XLA cost analysis counts a scan body once, so
+     per-cell cost is reconstructed from the depth probes:
+        X_total = X(probe0) + n_periods · (X(probe1) − X(probe0));
+  2. time-scan layers (sLSTM) — the inner over-sequence scan is also counted
+     once; an analytic (S−1)·step term is added (×3 for train: fwd+bwd+remat).
+
+MODEL_FLOPS = 6·N_active·tokens; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/attention/dispatch overhead per cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.configs.archs import ARCHS
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+# bytes a ring algorithm moves per device, as a multiple of the parsed
+# (per-device) result-shape bytes
+OP_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+             "all-to-all": 1.0, "collective-permute": 1.0}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _coll_bytes(coll: Dict[str, Dict]) -> float:
+    return sum(OP_FACTOR[k] * v["bytes"] for k, v in coll.items())
+
+
+def _probe_pair(rec):
+    lo, hi = rec.get("probe_levels", [0, 1])
+    probes = rec.get("probes") or {}
+    p_lo, p_hi = probes.get(f"p{lo}", {}), probes.get(f"p{hi}", {})
+    if "error" in p_lo or "error" in p_hi or not p_lo or not p_hi:
+        return None
+    return lo, p_lo, p_hi
+
+
+def _corrected(rec: Dict[str, Any], field: str) -> Optional[float]:
+    """probe-corrected per-device cost for `field` in {flops, bytes_accessed}.
+
+    total = f(lo) + (n_periods - lo) · max(f(hi) − f(lo), 0); negative deltas
+    (partitioner noise at tiny decode scales) clamp to the measured f(hi).
+    """
+    pair = _probe_pair(rec)
+    if pair is None:
+        return None
+    lo, p_lo, p_hi = pair
+    npd = rec.get("n_periods", 0)
+    delta = max(p_hi[field] - p_lo[field], 0.0)
+    return p_lo[field] + (npd - lo) * delta
+
+
+def _corrected_coll(rec: Dict[str, Any]) -> Optional[float]:
+    pair = _probe_pair(rec)
+    if pair is None:
+        return None
+    lo, p_lo, p_hi = pair
+    npd = rec.get("n_periods", 0)
+    delta = max(_coll_bytes(p_hi["collectives"]) - _coll_bytes(p_lo["collectives"]), 0.0)
+    return _coll_bytes(p_lo["collectives"]) + (npd - lo) * delta
+
+
+def _slstm_correction(arch: str, shape: str, chips: int) -> float:
+    """Analytic (S-1)-step flops for the sLSTM time scan (per device)."""
+    cfg = ARCHS[arch]
+    if "slstm" not in cfg.pattern:
+        return 0.0
+    cell = SHAPES[shape]
+    if cell.kind == "decode":
+        return 0.0  # decode steps the scan once; probe already counts it
+    n_slstm = cfg.n_layers * cfg.pattern.count("slstm") // len(cfg.pattern)
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    b_loc = max(1, cell.global_batch // 16)  # data-axis sharding
+    step_flops = 4 * 2 * b_loc * H * hd * hd
+    factor = 3.0 if cell.kind == "train" else 1.0  # fwd+bwd+remat
+    return n_slstm * (cell.seq_len - 1) * step_flops * factor
+
+
+def analyze_cell(rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if not rec.get("ok"):
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = ARCHS[arch]
+    cell = SHAPES[shape]
+    chips = rec["chips"]
+
+    flops = _corrected(rec, "flops")
+    bytes_acc = _corrected(rec, "bytes_accessed")
+    coll = _corrected_coll(rec)
+    corrected = flops is not None
+    # grad-accumulation wraps the loss in one more scan level: the probes see
+    # the microbatch body once -> scale the in-scan costs by the trip count
+    mb = rec.get("microbatches", 1)
+    if corrected and mb > 1:
+        flops *= mb
+        bytes_acc *= mb
+        coll *= mb
+    if flops is None:
+        flops = rec["cost"]["flops"]
+        bytes_acc = rec["cost"]["bytes_accessed"]
+        coll = _coll_bytes(rec["collectives"])
+    flops += _slstm_correction(arch, shape, chips)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    n_active = cfg.params_per_token()
+    mult = 3.0 if cell.kind == "train" else 1.0  # fwd only vs fwd+bwd
+    if cfg.is_encdec and cell.kind != "decode":
+        # encoder runs over S/4 frames, decoder over S tokens: split N
+        d, hd = cfg.d_model, cfg.head_dim_
+        attn = d * (cfg.n_heads * hd) * 2 + d * (cfg.n_kv_heads * hd) * 2
+        n_enc = cfg.n_encoder_layers * (attn + 3 * d * cfg.d_ff)
+        n_dec = n_active - n_enc
+        enc_tokens = cell.global_batch * max(64, cell.seq_len // 4)
+        model_flops = 2.0 * mult * (n_dec * tokens + n_enc * enc_tokens) / chips
+    else:
+        model_flops = 2.0 * mult * n_active * tokens / chips  # per device
+    ratio = model_flops / flops if flops else 0.0
+
+    mem = rec.get("memory", {})
+    hbm_gib = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+               + mem.get("output_bytes", 0) - mem.get("alias_bytes", 0)) / 2**30
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"], "chips": chips,
+        "flops_per_dev": flops, "bytes_per_dev": bytes_acc,
+        "coll_bytes_per_dev": coll,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": model_flops, "useful_ratio": ratio,
+        "hbm_gib": hbm_gib, "fits_16g": hbm_gib <= 16.0,
+        "probe_corrected": corrected,
+    }
+
+
+def load_all(mesh: str = "16x16", dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        rec = json.load(open(f))
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "skipped": True,
+                         "reason": rec.get("reason")})
+            continue
+        a = analyze_cell(rec)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_coll | dominant | "
+           "6ND/HLO | HBM GiB | fits |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped ({r['reason']}) | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} ms "
+            f"| {r['t_memory_s']*1e3:.2f} ms | {r['t_collective_s']*1e3:.3f} ms "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_gib']:.1f} | {'y' if r['fits_16g'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def run() -> List[Dict]:
+    return load_all()
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(render_markdown(rows))

@@ -1,0 +1,97 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * table1.*      — dataset characteristics (paper Table 1)
+  * fig3.*        — extraction tasks vs the normalized-join baseline +
+                    horizontal-scaling evidence (paper Figure 3)
+  * flatten.*     — SCALPEL-Flattening throughput (paper §4)
+  * roofline.*    — per-cell dry-run roofline summary (§Roofline), if the
+                    dry-run matrix artifacts exist
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_table1() -> None:
+    from benchmarks import table1_dataset
+
+    for r in table1_dataset.run(n_patients=2_000):
+        _emit(
+            f"table1.{r['database']}",
+            r["flatten_seconds"] * 1e6,
+            f"rows={r['rows_central']}->{r['rows_denormalized']} "
+            f"csv/columnar={r['csv_over_columnar']}x",
+        )
+
+
+def bench_fig3() -> None:
+    from benchmarks import fig3_scaling
+
+    for r in fig3_scaling.run_baseline(n_patients=2_000):
+        _emit(
+            f"fig3.baseline.{r['task']}",
+            r["scalpel3_s"] * 1e6,
+            f"normalized_join={r['normalized_join_s']}s speedup={r['speedup']}x",
+        )
+    for r in fig3_scaling.run_scaling(n_patients=2_000, shard_counts=(1, 2, 4)):
+        if "error" in r:
+            _emit(f"fig3.scaling.shards{r['shards']}", 0.0, "ERROR")
+            continue
+        _emit(
+            f"fig3.scaling.{r['task']}.shards{r['shards']}",
+            r["wall_s"] * 1e6,
+            f"per_dev_bytes={r['per_device_bytes']:.3g} "
+            f"per_dev_flops={r['per_device_flops']:.3g}",
+        )
+
+
+def bench_flattening() -> None:
+    from benchmarks import flattening_bench
+
+    for r in flattening_bench.run(n_patients=4_000):
+        _emit(
+            f"flatten.{r['database']}",
+            r["flatten_s"] * 1e6,
+            f"rows_per_s={r.get('rows_per_s')} mb_per_s={r.get('mb_per_s', '')}",
+        )
+
+
+def bench_roofline() -> None:
+    from benchmarks import roofline
+
+    rows = roofline.run()
+    if not rows:
+        _emit("roofline", 0.0, "dry-run artifacts missing (run launch.dryrun)")
+        return
+    for r in rows:
+        if r.get("skipped"):
+            _emit(f"roofline.{r['arch']}.{r['shape']}", 0.0, "skipped")
+            continue
+        dom_t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        _emit(
+            f"roofline.{r['arch']}.{r['shape']}",
+            dom_t * 1e6,
+            f"dominant={r['dominant']} ratio={r['useful_ratio']:.2f} "
+            f"hbm={r['hbm_gib']:.1f}GiB",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_table1()
+    bench_flattening()
+    bench_fig3()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

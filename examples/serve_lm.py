@@ -1,0 +1,16 @@
+"""Serving example: continuous-batching engine over a reduced model.
+
+Boots the slot-based engine (vLLM-style admission over a fixed KV pool),
+submits event-token prompts, decodes greedily until EOS/max-new.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-1.5b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Assigned-architecture configs (public-literature specs; see each module)."""
+from repro.configs.base import ModelConfig, ShapeCell, SHAPES
+from repro.configs.archs import ARCHS, get_config, reduced_config
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPES", "ARCHS", "get_config", "reduced_config"]

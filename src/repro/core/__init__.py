@@ -1,0 +1,56 @@
+"""SCALPEL3-JAX core: the paper's contribution as composable JAX modules.
+
+Three components, mirroring the paper's three libraries:
+  * flattening  — SCALPEL-Flattening  (denormalize once, columnar, distributed)
+  * extraction/transformers — SCALPEL-Extraction (concepts from flat tables)
+  * cohort/stats/feature_driver — SCALPEL-Analysis (interactive cohort algebra)
+"""
+from repro.core.columnar import ColumnarTable, NULL_INT, NULL_FLOAT, is_null
+from repro.core.schema import (
+    DCIR_SCHEMA, PMSI_MCO_SCHEMA, SSR_SCHEMA, HAD_SCHEMA, IR_IMB_SCHEMA,
+    StarSchema, TableSchema, JoinEdge,
+)
+from repro.core.events import Category, make_events, sort_events
+from repro.core.flattening import (
+    flatten_star,
+    flatten_sliced,
+    distributed_flatten,
+    lookup_join,
+    expand_join,
+    exchange,
+    hash_partition,
+    FlatteningStats,
+)
+from repro.core.extraction import (
+    Extractor,
+    drug_dispenses,
+    medical_acts_dcir,
+    medical_acts_pmsi,
+    diagnoses,
+    hospital_stays,
+    patients,
+    dedupe_by,
+    biology_acts,
+    practitioner_encounters,
+    csarr_acts,
+    ssr_stays,
+    takeover_reasons,
+    long_term_diseases,
+)
+from repro.core.transformers import (
+    observation_period,
+    follow_up,
+    trackloss,
+    exposures,
+    exposures_sharded,
+    fractures,
+    drug_prescriptions,
+    drug_interactions,
+    bladder_cancer,
+    infarctus,
+    heart_failure,
+)
+from repro.core.cohort import Bitset, Cohort, CohortCollection, CohortFlow
+from repro.core.metadata import OperationLog, git_hash
+from repro.core.feature_driver import FeatureDriver, TokenizerSpec
+from repro.core import stats

@@ -1,0 +1,206 @@
+"""SCALPEL-Analysis: Cohort / CohortCollection / CohortFlow abstractions.
+
+A ``Cohort`` is a set of patients + their events in a time window (paper
+§3.5).  Subject membership is a packed ``uint32`` bitset over the patient
+universe, so the paper's algebra (∩ ∪ \\) is bitwise ops + popcount — the hot
+path has a Pallas kernel (``kernels/bitset_ops``); counts are
+``lax.population_count`` reductions.  Descriptions compose automatically, as
+in the paper's Supplementary Out[6].
+
+``CohortFlow`` is the left fold ``(((c0 ∩ c1) ∩ c2) ∩ ...)`` with per-stage
+retention counts — the RECORD-statement flowchart generator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.columnar import ColumnarTable
+from repro.core.metadata import OperationLog
+
+__all__ = ["Bitset", "Cohort", "CohortCollection", "CohortFlow"]
+
+
+# ---------------------------------------------------------------------------
+# Packed-bitset subject sets
+# ---------------------------------------------------------------------------
+class Bitset:
+    """Fixed-universe packed bitset (uint32 words)."""
+
+    @staticmethod
+    def n_words(n_patients: int) -> int:
+        return (n_patients + 31) // 32
+
+    @staticmethod
+    def from_mask(mask: jax.Array) -> jax.Array:
+        n = mask.shape[0]
+        pad = (-n) % 32
+        m = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(-1, 32)
+        weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+        return (m * weights).sum(axis=1, dtype=jnp.uint32)
+
+    @staticmethod
+    def from_indices(idx: jax.Array, valid: jax.Array, n_patients: int) -> jax.Array:
+        mask = (
+            jnp.zeros((n_patients,), bool)
+            .at[jnp.where(valid, idx, n_patients)]
+            .set(True, mode="drop")
+        )
+        return Bitset.from_mask(mask)
+
+    @staticmethod
+    def to_mask(bits: jax.Array, n_patients: int) -> jax.Array:
+        words = bits[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]
+        return (words & 1).astype(bool).reshape(-1)[:n_patients]
+
+    @staticmethod
+    def count(bits: jax.Array) -> jax.Array:
+        return jax.lax.population_count(bits).sum(dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Cohort:
+    """Patients + events in a [start, end] window (paper §3.5)."""
+
+    name: str
+    description: str
+    subjects: jax.Array                      # packed uint32 bitset
+    n_patients: int
+    events: Optional[ColumnarTable] = None   # associated Event table
+    window: Tuple[int, int] = (0, 2_000_000_000)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_events(cls, name: str, events: ColumnarTable, n_patients: int,
+                    description: Optional[str] = None) -> "Cohort":
+        bits = Bitset.from_indices(events.columns["patient_id"], events.valid, n_patients)
+        return cls(
+            name=name,
+            description=description or f"subjects with event {name}",
+            subjects=bits,
+            n_patients=n_patients,
+            events=events,
+        )
+
+    @classmethod
+    def from_patient_table(cls, name: str, patients: ColumnarTable, n_patients: int) -> "Cohort":
+        bits = Bitset.from_indices(patients.columns["patient_id"], patients.valid, n_patients)
+        return cls(name=name, description=name, subjects=bits, n_patients=n_patients)
+
+    # -- paper API ------------------------------------------------------------
+    def subject_count(self) -> int:
+        return int(Bitset.count(self.subjects))
+
+    def subjects_mask(self) -> jax.Array:
+        return Bitset.to_mask(self.subjects, self.n_patients)
+
+    def describe(self) -> str:
+        return self.description
+
+    def _combine(self, other: "Cohort", bits: jax.Array, desc: str, name: str) -> "Cohort":
+        if self.n_patients != other.n_patients:
+            raise ValueError("cohorts live in different patient universes")
+        ev = self.events
+        if ev is not None:
+            keep_mask = Bitset.to_mask(bits, self.n_patients)
+            ev = ev.filter(keep_mask[jnp.clip(ev.columns["patient_id"], 0, self.n_patients - 1)])
+        return Cohort(name=name, description=desc, subjects=bits,
+                      n_patients=self.n_patients, events=ev,
+                      window=(max(self.window[0], other.window[0]),
+                              min(self.window[1], other.window[1])))
+
+    def intersection(self, other: "Cohort") -> "Cohort":
+        return self._combine(
+            other, self.subjects & other.subjects,
+            f"{self.description} with {other.description}",
+            f"{self.name}&{other.name}",
+        )
+
+    def union(self, other: "Cohort") -> "Cohort":
+        return self._combine(
+            other, self.subjects | other.subjects,
+            f"{self.description} or {other.description}",
+            f"{self.name}|{other.name}",
+        )
+
+    def difference(self, other: "Cohort") -> "Cohort":
+        return self._combine(
+            other, self.subjects & ~other.subjects,
+            f"{self.description} without {other.description}",
+            f"{self.name}-{other.name}",
+        )
+
+    # granular control: underlying tables stay reachable (paper: "More
+    # granular control is kept available through accesses to the underlying
+    # Spark DataFrames")
+    def events_of(self) -> Optional[ColumnarTable]:
+        return self.events
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CohortCollection:
+    """Named cohorts + shared metadata (paper §3.5)."""
+
+    cohorts: Dict[str, Cohort]
+    metadata: Optional[OperationLog] = None
+
+    @property
+    def cohorts_names(self) -> set:
+        return set(self.cohorts)
+
+    def get(self, name: str) -> Cohort:
+        return self.cohorts[name]
+
+    def add(self, cohort: Cohort) -> None:
+        self.cohorts[cohort.name] = cohort
+
+    @classmethod
+    def from_extractions(cls, named_events: Dict[str, ColumnarTable], n_patients: int,
+                         metadata: Optional[OperationLog] = None) -> "CohortCollection":
+        return cls(
+            {n: Cohort.from_events(n, ev, n_patients) for n, ev in named_events.items()},
+            metadata=metadata,
+        )
+
+
+# ---------------------------------------------------------------------------
+class CohortFlow:
+    """Ordered left fold of intersections with per-stage tracking."""
+
+    def __init__(self, cohorts: Sequence[Cohort]):
+        if not cohorts:
+            raise ValueError("empty flow")
+        self.inputs = list(cohorts)
+        self.steps: List[Cohort] = [cohorts[0]]
+        for c in cohorts[1:]:
+            self.steps.append(self.steps[-1].intersection(c))
+
+    @property
+    def final(self) -> Cohort:
+        return self.steps[-1]
+
+    def flowchart(self) -> List[Dict[str, object]]:
+        rows = []
+        prev = None
+        for inp, st in zip(self.inputs, self.steps):
+            n = st.subject_count()
+            rows.append({
+                "stage": inp.name,
+                "subjects": n,
+                "removed": (prev - n) if prev is not None else 0,
+                "description": st.description,
+            })
+            prev = n
+        return rows
+
+    def render(self) -> str:
+        lines = [f"{'stage':32s} {'subjects':>10s} {'removed':>8s}"]
+        for r in self.flowchart():
+            lines.append(f"{r['stage']:32s} {r['subjects']:10d} {r['removed']:8d}")
+        return "\n".join(lines)

@@ -1,0 +1,87 @@
+"""Patient / Event abstractions (paper §3.4) in columnar batch form.
+
+The paper's two core records:
+  * ``Patient(patientID, gender, birthDate, deathDate)``
+  * ``Event(patientID, category, groupID, value, weight, start, end)`` —
+    punctual events carry ``end == NULL``; continuous events carry a real end.
+
+Batches of either are ``ColumnarTable``s with the standardized schema; the
+category vocabulary below is shared by extractors, transformers and the
+feature driver (it doubles as the LM token-type space).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.columnar import ColumnarTable, NULL_INT
+
+__all__ = ["Category", "make_events", "empty_events", "sort_events", "EVENT_COLUMNS"]
+
+
+class Category:
+    """Event-category vocabulary (extractor outputs + transformer outputs)."""
+
+    DRUG_DISPENSE = 1
+    MEDICAL_ACT = 2
+    DIAGNOSIS = 3
+    HOSPITAL_STAY = 4
+    BIOLOGY = 5
+    PRACTITIONER = 6
+    # transformer-produced (complex) events:
+    FOLLOW_UP = 10
+    EXPOSURE = 11
+    OUTCOME_FRACTURE = 12
+    TRACKLOSS = 13
+    OBSERVATION = 14
+
+    NAMES = {
+        1: "drug_dispense", 2: "medical_act", 3: "diagnosis", 4: "hospital_stay",
+        5: "biology", 6: "practitioner", 10: "follow_up", 11: "exposure",
+        12: "fracture", 13: "trackloss", 14: "observation",
+    }
+
+
+EVENT_COLUMNS = ("patient_id", "category", "group_id", "value", "weight", "start", "end")
+
+
+def make_events(
+    patient_id: jax.Array,
+    category,
+    value: jax.Array,
+    start: jax.Array,
+    end: jax.Array | None = None,
+    group_id: jax.Array | None = None,
+    weight: jax.Array | None = None,
+    valid: jax.Array | None = None,
+) -> ColumnarTable:
+    """Assemble a standardized event batch (step 3 of the extractor design)."""
+    n = patient_id.shape[0]
+    cat = jnp.broadcast_to(jnp.asarray(category, jnp.int32), (n,))
+    cols = {
+        "patient_id": patient_id.astype(jnp.int32),
+        "category": cat,
+        "group_id": (group_id if group_id is not None else jnp.zeros((n,), jnp.int32)).astype(jnp.int32),
+        "value": value.astype(jnp.int32),
+        "weight": (weight if weight is not None else jnp.ones((n,), jnp.float32)).astype(jnp.float32),
+        "start": start.astype(jnp.int32),
+        "end": (end if end is not None else jnp.full((n,), NULL_INT, jnp.int32)).astype(jnp.int32),
+    }
+    return ColumnarTable.from_columns(cols, valid=valid)
+
+
+def empty_events(capacity: int) -> ColumnarTable:
+    z = jnp.zeros((capacity,), jnp.int32)
+    return make_events(z, 0, z, z, valid=jnp.zeros((capacity,), bool))
+
+
+def sort_events(events: ColumnarTable) -> ColumnarTable:
+    """Canonical event order: (patient, start, category, value).
+
+    Transformers assume this order; the flattening step emits it once so every
+    downstream per-patient fold is a segment operation (DESIGN.md §2).
+    """
+    return events.sort_by(["patient_id", "start", "category", "value"])

@@ -1,0 +1,306 @@
+"""SCALPEL-Extraction: concept extractors over the denormalized flat table.
+
+An ``Extractor`` maps flat-table rows to zero-or-more standardized ``Event``
+rows (paper §3.4, Figure 2), as a composition of columnar steps:
+
+  step 1  column projection            (metadata-only)
+  step 2  null filtering               (mask algebra over validity/sentinels)
+  step 2b optional row-value filtering (vectorized predicate, late — on
+                                        already-reduced data, as in the paper)
+  step 3  schema conformance + compaction to the Event layout
+
+Steps 1–2b never materialize rows (masks only); the single materialization is
+the final compaction, for which the production path is the Pallas
+``filter_compact`` kernel (``repro.kernels.ops``) with a pure-jnp fallback.
+
+Every extraction records provenance into an ``OperationLog`` so
+SCALPEL-Analysis can rebuild flowcharts from metadata (paper §3.4 last ¶).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.columnar import ColumnarTable, NULL_INT, is_null
+from repro.core.events import Category, make_events
+from repro.core.metadata import OperationLog
+
+__all__ = [
+    "Extractor",
+    "dedupe_by",
+    "drug_dispenses",
+    "medical_acts_dcir",
+    "medical_acts_pmsi",
+    "diagnoses",
+    "hospital_stays",
+    "patients",
+]
+
+
+def dedupe_by(table: ColumnarTable, keys: Sequence[str]) -> ColumnarTable:
+    """DISTINCT over key columns: sort, keep the first row of each run.
+
+    Needed because a denormalized 1:N flat table repeats parent attributes
+    (e.g. one hospital stay appears once per diagnosis×act pair).
+    """
+    t = table.sort_by(list(keys))
+    same_as_prev = t.valid
+    first = jnp.ones((t.capacity,), bool)
+    neq = jnp.zeros((t.capacity,), bool)
+    for k in keys:
+        col = t.columns[k]
+        neq = neq | jnp.concatenate([jnp.ones((1,), bool), col[1:] != col[:-1]])
+    prev_valid = jnp.concatenate([jnp.zeros((1,), bool), t.valid[:-1]])
+    keep = t.valid & (neq | ~prev_valid)
+    return t.filter(keep)
+
+
+@dataclasses.dataclass(frozen=True)
+class Extractor:
+    """Declarative concept extractor (paper Table 3 entries are instances)."""
+
+    name: str
+    source: str                      # flat-table name this extractor reads
+    category: int                    # Event.category to emit
+    value_col: str                   # -> Event.value
+    start_col: str                   # -> Event.start
+    end_col: Optional[str] = None    # -> Event.end (None => punctual)
+    group_col: Optional[str] = None  # -> Event.groupID
+    weight_col: Optional[str] = None # -> Event.weight
+    null_cols: Tuple[str, ...] = ()  # step-2 null filter columns
+    codes: Optional[Tuple[int, ...]] = None  # step-2b value whitelist
+    distinct: Tuple[str, ...] = ()   # dedupe keys (for 1:N flat layouts)
+
+    def __call__(self, flat: ColumnarTable, log: Optional[OperationLog] = None,
+                 compact: bool = True, engine: str = "xla") -> ColumnarTable:
+        """engine: 'xla' (argsort compaction, default) or 'pallas' (the
+        fused filter_compact kernel — the TPU production path; on CPU it runs
+        in interpret mode, so it is opt-in)."""
+        # step 1: projection — only the columns this extractor touches.
+        needed = ["patient_id", self.value_col, self.start_col]
+        for c in (self.end_col, self.group_col, self.weight_col):
+            if c:
+                needed.append(c)
+        needed += [c for c in self.null_cols if c not in needed]
+        needed += [c for c in self.distinct if c not in needed]
+        t = flat.select(sorted(set(needed)))
+
+        # step 2: null filtering (mask algebra, no materialization).
+        t = t.drop_nulls(self.null_cols or (self.value_col,))
+
+        # step 2b: late value filter on reduced data.
+        if self.codes is not None:
+            allowed = jnp.asarray(np.asarray(self.codes, np.int32))
+            t = t.filter(jnp.isin(t.columns[self.value_col], allowed))
+
+        if self.distinct:
+            t = dedupe_by(t, self.distinct)
+
+        # step 3: conform to the Event schema.
+        ev = make_events(
+            patient_id=t.columns["patient_id"],
+            category=self.category,
+            value=t.columns[self.value_col],
+            start=t.columns[self.start_col],
+            end=t.columns[self.end_col] if self.end_col else None,
+            group_id=t.columns[self.group_col] if self.group_col else None,
+            weight=t.columns[self.weight_col] if self.weight_col else None,
+            valid=t.valid,
+        )
+        if compact:
+            ev = self._compact(ev, engine)
+        if log is not None:
+            log.record(
+                op=f"extract:{self.name}",
+                inputs={self.source: flat},
+                outputs={self.name: ev},
+                params={"codes": None if self.codes is None else len(self.codes)},
+            )
+        return ev
+
+    @staticmethod
+    def _compact(ev: ColumnarTable, engine: str) -> ColumnarTable:
+        if engine == "xla":
+            return ev.compact()
+        if engine != "pallas":
+            raise ValueError(f"unknown engine {engine!r}")
+        from repro.kernels import ops as kops
+
+        cols = {}
+        count = None
+        for name, col in ev.columns.items():
+            out, cnt = kops.filter_compact(col, ev.valid)
+            cols[name] = out
+            count = cnt if count is None else count
+        valid = jnp.arange(ev.capacity) < count
+        return ColumnarTable(cols, valid, count.astype(jnp.int32))
+
+
+# --- ready-to-use extractors (paper Table 3) --------------------------------
+def drug_dispenses(granularity: str = "cip13", codes: Optional[Sequence[int]] = None) -> Extractor:
+    """Drug dispense extractor; granularity ∈ {cip13, atc} (paper §3.4:
+    "events at multiple levels of granularity (drug, molecule, ATC class)")."""
+    col = {"cip13": "cip13", "atc": "atc_class"}[granularity]
+    return Extractor(
+        name=f"drug_purchases[{granularity}]",
+        source="DCIR",
+        category=Category.DRUG_DISPENSE,
+        value_col=col,
+        start_col="execution_date",
+        weight_col=None,
+        null_cols=("cip13",),
+        codes=None if codes is None else tuple(int(c) for c in codes),
+    )
+
+
+def medical_acts_dcir(codes: Optional[Sequence[int]] = None) -> Extractor:
+    return Extractor(
+        name="acts",
+        source="DCIR",
+        category=Category.MEDICAL_ACT,
+        value_col="ccam_code",
+        start_col="execution_date",
+        null_cols=("ccam_code",),
+        codes=None if codes is None else tuple(int(c) for c in codes),
+    )
+
+
+def medical_acts_pmsi(codes: Optional[Sequence[int]] = None) -> Extractor:
+    """Acts from the hospital flat table — the paper's slow task (e): the 1:N
+    flat layout forces a distinct + more row-value tests (§5 discussion)."""
+    return Extractor(
+        name="hospital_acts",
+        source="PMSI_MCO",
+        category=Category.MEDICAL_ACT,
+        value_col="ccam_code",
+        start_col="act_date",
+        null_cols=("ccam_code",),
+        codes=None if codes is None else tuple(int(c) for c in codes),
+        distinct=("stay_id", "ccam_code", "act_date"),
+    )
+
+
+def diagnoses(kinds: Sequence[int] = (1, 2, 3), codes: Optional[Sequence[int]] = None) -> Extractor:
+    """Main/associated/linked diagnoses (paper Table 3); group_id = kind."""
+    return Extractor(
+        name="diagnoses",
+        source="PMSI_MCO",
+        category=Category.DIAGNOSIS,
+        value_col="icd_code",
+        start_col="stay_start",
+        group_col="diag_kind",
+        null_cols=("icd_code",),
+        codes=None if codes is None else tuple(int(c) for c in codes),
+        distinct=("stay_id", "icd_code", "diag_kind"),
+    )
+
+
+def hospital_stays() -> Extractor:
+    return Extractor(
+        name="extract_hospital_stays",
+        source="PMSI_MCO",
+        category=Category.HOSPITAL_STAY,
+        value_col="ghm_code",
+        start_col="stay_start",
+        end_col="stay_end",
+        distinct=("stay_id",),
+    )
+
+
+def patients(ir_ben: ColumnarTable, log: Optional[OperationLog] = None) -> ColumnarTable:
+    """Patient demographics (task (a) of the paper's evaluation)."""
+    t = dedupe_by(ir_ben.select(["patient_id", "gender", "birth_date", "death_date"]),
+                  ["patient_id"]).compact()
+    if log is not None:
+        log.record(op="extract:extract_patients", inputs={"IR_BEN": ir_ben},
+                   outputs={"extract_patients": t}, params={})
+    return t
+
+
+# --- additional extractors (paper Table 3: biology, NGAP, practitioner
+# encounters, CSARR, long-term diseases, takeover reasons) --------------------
+def biology_acts(codes: Optional[Sequence[int]] = None) -> Extractor:
+    """Biological acts from DCIR (paper Table 3 'Biological acts').
+
+    In the synthetic star, biology rides the prestation code space (the real
+    ER_BIO_F table joins like ER_CAM); prestation codes >= 1080 model biology.
+    """
+    return Extractor(
+        name="biological_acts",
+        source="DCIR",
+        category=Category.BIOLOGY,
+        value_col="prestation_code",
+        start_col="execution_date",
+        codes=tuple(codes) if codes is not None else tuple(range(1080, 1100)),
+    )
+
+
+def practitioner_encounters(medical: bool = True) -> Extractor:
+    """Practitioner encounters (paper Table 3, medical vs non-medical) —
+    identified by the prestation code band of the cash flow."""
+    band = range(1000, 1040) if medical else range(1040, 1080)
+    return Extractor(
+        name=f"{'medical' if medical else 'non_medical'}_encounters",
+        source="DCIR",
+        category=Category.PRACTITIONER,
+        value_col="prestation_code",
+        start_col="execution_date",
+        codes=tuple(band),
+    )
+
+
+def csarr_acts(codes: Optional[Sequence[int]] = None) -> Extractor:
+    """CSARR rehabilitation acts from the SSR flat table."""
+    return Extractor(
+        name="csarr_acts",
+        source="SSR",
+        category=Category.MEDICAL_ACT,
+        value_col="csarr_code",
+        start_col="act_date",
+        null_cols=("csarr_code",),
+        codes=None if codes is None else tuple(int(c) for c in codes),
+        distinct=("stay_id", "csarr_code", "act_date"),
+    )
+
+
+def ssr_stays() -> Extractor:
+    """SSR stay (longitudinal) events (paper Table 3 'SSR Stay')."""
+    return Extractor(
+        name="ssr_stays",
+        source="SSR",
+        category=Category.HOSPITAL_STAY,
+        value_col="takeover_code",
+        start_col="stay_start",
+        end_col="stay_end",
+        distinct=("stay_id",),
+    )
+
+
+def takeover_reasons(main: bool = True) -> Extractor:
+    """HAD main/associated takeover reasons (paper Table 3)."""
+    return Extractor(
+        name=f"{'main' if main else 'associated'}_takeover",
+        source="HAD",
+        category=Category.PRACTITIONER,
+        value_col="main_takeover" if main else "assoc_takeover",
+        start_col="episode_start",
+        null_cols=("main_takeover",) if main else ("assoc_takeover",),
+    )
+
+
+def long_term_diseases(codes: Optional[Sequence[int]] = None) -> Extractor:
+    """Long-term chronic disease (ALD) longitudinal events from IR_IMB_R."""
+    return Extractor(
+        name="long_term_diseases",
+        source="IR_IMB",
+        category=Category.DIAGNOSIS,
+        value_col="ald_icd_code",
+        start_col="ald_start",
+        end_col="ald_end",
+        group_col=None,
+        codes=None if codes is None else tuple(int(c) for c in codes),
+    )

@@ -1,0 +1,407 @@
+"""SCALPEL-Flattening: distributed denormalization of star-schema claims data.
+
+The paper's pitch (§3.3): pay the join cost *once* — recursively left-join the
+dimension/child tables onto the central fact table, store the result columnar,
+and every later query becomes a shuffle-free columnar scan.
+
+TPU adaptation (DESIGN.md §2):
+  * Spark shuffle  -> ``jax.lax.all_to_all`` over the mesh ``data`` axis
+                      (fixed-capacity hash-partition exchange; XLA needs static
+                      shapes so each destination bucket has a capacity and an
+                      overflow counter instead of dynamic spill).
+  * N:1 join       -> sorted-lookup join (searchsorted + gather).
+  * 1:N join       -> offset-expansion join (prefix-sum over match counts);
+                      this is what reproduces the PMSI-MCO row blow-up of
+                      Table 1 and its block-sparsity discussion in §5.
+  * temporal slice -> host-driven loop over time buckets, each bucket a
+                      bounded-capacity flatten, results appended (paper: joins
+                      "sequentially appended to the output parquet file").
+  * monitoring     -> per-stage row counts + key checksums proving no loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.columnar import ColumnarTable, NULL_FLOAT, NULL_INT
+from repro.core.schema import JoinEdge, StarSchema
+
+__all__ = [
+    "lookup_join",
+    "expand_join",
+    "flatten_star",
+    "flatten_sliced",
+    "FlatteningStats",
+    "hash_partition",
+    "exchange",
+    "distributed_flatten",
+]
+
+
+def _sentinel(dtype) -> jax.Array:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(NULL_FLOAT, dtype)
+    return jnp.asarray(NULL_INT, dtype)
+
+
+def _maxval(dtype) -> jax.Array:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.finfo(dtype).max, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+@dataclasses.dataclass
+class FlatteningStats:
+    """Monitoring statistics computed along the flattening (paper §3.3)."""
+
+    stage: str
+    rows_in: jax.Array
+    rows_out: jax.Array
+    matched: jax.Array      # left rows that found >=1 right match
+    overflow: jax.Array     # rows dropped because a static capacity was hit
+    key_sum_in: jax.Array
+    key_sum_out: jax.Array
+
+    def assert_no_loss(self):
+        """Host-side check: every input row survived (paper's no-loss audit)."""
+        if int(self.overflow) != 0:
+            raise AssertionError(f"stage {self.stage}: {int(self.overflow)} rows overflowed")
+
+
+# ---------------------------------------------------------------------------
+# N:1 sorted-lookup join (DCIR block-sparse detail tables, patient repository)
+# ---------------------------------------------------------------------------
+def lookup_join(
+    left: ColumnarTable,
+    right: ColumnarTable,
+    left_key: str,
+    right_key: str,
+    prefix: str = "",
+) -> Tuple[ColumnarTable, FlatteningStats]:
+    """Left join where ``right`` has at most one row per key.
+
+    Right is sorted by key (invalid rows sink with +inf key), left keys are
+    located by ``searchsorted``, right attributes gathered, misses filled with
+    null sentinels — exactly a hash-lookup join expressed in sorted-columnar
+    form (TPUs vastly prefer sorted gathers over scattered hash probes).
+    """
+    r = right.sort_by([right_key])
+    cap_r = r.capacity
+    lk = left.columns[left_key]
+    if cap_r == 0:  # empty right table: every left row misses
+        pos = jnp.zeros(left.capacity, jnp.int32)
+        posc = pos
+        found = jnp.zeros(left.capacity, bool)
+        r = r.pad_to(1)  # 1-row dummy so gathers below are well-formed
+    else:
+        rk = jnp.where(r.valid, r.columns[right_key],
+                       _maxval(r.columns[right_key].dtype))
+        pos = jnp.searchsorted(rk, lk, side="left")
+        posc = jnp.clip(pos, 0, cap_r - 1)
+        found = (pos < cap_r) & (rk[posc] == lk) & r.valid[posc] & left.valid
+
+    new_cols = dict(left.columns)
+    for name in r.column_names:
+        if name == right_key:
+            continue
+        out_name = prefix + name
+        if out_name in new_cols:
+            raise ValueError(f"column collision {out_name!r}; pass a prefix")
+        col = r.columns[name]
+        new_cols[out_name] = jnp.where(found, col[posc], _sentinel(col.dtype))
+
+    out = ColumnarTable(new_cols, left.valid, left.count)
+    key_col = left.columns[left_key].astype(jnp.uint32)
+    stats = FlatteningStats(
+        stage=f"lookup_join[{left_key}]",
+        rows_in=left.count,
+        rows_out=out.count,
+        matched=found.sum().astype(jnp.int32),
+        overflow=jnp.int32(0),
+        key_sum_in=jnp.where(left.valid, key_col, 0).sum(dtype=jnp.uint32),
+        key_sum_out=jnp.where(out.valid, key_col, 0).sum(dtype=jnp.uint32),
+    )
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# 1:N offset-expansion join (PMSI child tables -> the Table-1 blow-up)
+# ---------------------------------------------------------------------------
+def expand_join(
+    left: ColumnarTable,
+    right: ColumnarTable,
+    left_key: str,
+    right_key: str,
+    out_capacity: int,
+    prefix: str = "",
+) -> Tuple[ColumnarTable, FlatteningStats]:
+    """Left join where ``right`` may hold N rows per key; output row per pair.
+
+    Match counts per left row come from two ``searchsorted`` passes over the
+    sorted right keys; an exclusive prefix sum turns them into output offsets;
+    each output slot locates its (left row, right row) pair by binary search.
+    Unmatched left rows still emit one row (left-join semantics) with null
+    right attributes.  ``out_capacity`` bounds the static output size; slots
+    beyond the true total are invalid, and a positive ``overflow`` statistic
+    flags capacity overruns (the audit the paper computes per stage).
+    """
+    L = left.capacity
+    if right.capacity == 0:
+        right = right.pad_to(1)
+    r = right.sort_by([right_key])
+    cap_r = r.capacity
+    rk = jnp.where(r.valid, r.columns[right_key], _maxval(r.columns[right_key].dtype))
+    lk = left.columns[left_key]
+
+    start = jnp.searchsorted(rk, lk, side="left")
+    stop = jnp.searchsorted(rk, lk, side="right")
+    cnt = jnp.where(left.valid, stop - start, 0)
+    out_cnt = jnp.where(left.valid, jnp.maximum(cnt, 1), 0)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(out_cnt).astype(jnp.int32)])
+    total = offs[-1]
+
+    j = jnp.arange(out_capacity, dtype=jnp.int32)
+    src = jnp.clip(jnp.searchsorted(offs, j, side="right") - 1, 0, L - 1)
+    rel = j - offs[src]
+    has_match = cnt[src] > 0
+    ridx = jnp.clip(start[src] + rel, 0, cap_r - 1)
+    out_valid = (j < total) & left.valid[src]
+    right_ok = has_match & out_valid
+
+    new_cols = {k: jnp.where(out_valid, v[src], _sentinel(v.dtype)) for k, v in left.columns.items()}
+    for name in r.column_names:
+        if name == right_key:
+            continue
+        out_name = prefix + name
+        if out_name in new_cols:
+            raise ValueError(f"column collision {out_name!r}; pass a prefix")
+        col = r.columns[name]
+        new_cols[out_name] = jnp.where(right_ok, col[ridx], _sentinel(col.dtype))
+
+    out = ColumnarTable(new_cols, out_valid, out_valid.sum().astype(jnp.int32))
+    key_u32 = lk.astype(jnp.uint32)
+    stats = FlatteningStats(
+        stage=f"expand_join[{left_key}]",
+        rows_in=left.count,
+        rows_out=out.count,
+        matched=(cnt > 0).sum().astype(jnp.int32),
+        overflow=jnp.maximum(total - out_capacity, 0).astype(jnp.int32),
+        key_sum_in=jnp.where(left.valid, key_u32, 0).sum(dtype=jnp.uint32),
+        key_sum_out=jnp.where(out_valid, new_cols[left_key].astype(jnp.uint32), 0).sum(dtype=jnp.uint32),
+    )
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# Whole-star flattening
+# ---------------------------------------------------------------------------
+def flatten_star(
+    schema: StarSchema,
+    tables: Mapping[str, ColumnarTable],
+    expand_capacity: Optional[int] = None,
+    expand_slack: float = 1.5,
+) -> Tuple[ColumnarTable, List[FlatteningStats]]:
+    """Denormalize one sub-database: sequential joins from the central table.
+
+    ``expand_capacity`` bounds each 1:N expansion; when omitted it is derived
+    host-side from the child-table capacities (the Spark analogue is the
+    driver sizing shuffle partitions from table statistics).
+    """
+    flat = tables[schema.central.name]
+    stats: List[FlatteningStats] = []
+    for edge in schema.joins:
+        right = tables[edge.right]
+        if edge.one_to_many:
+            cap = expand_capacity
+            if cap is None:
+                # worst case: every existing flat row matches avg child rows;
+                # slack absorbs skew. Static: derived from capacities only.
+                cap = int((flat.capacity + right.capacity) * expand_slack)
+            flat, st = expand_join(flat, right, edge.left_key, edge.right_key, cap)
+        else:
+            flat, st = lookup_join(flat, right, edge.left_key, edge.right_key)
+        stats.append(st)
+    return flat, stats
+
+
+def flatten_sliced(
+    schema: StarSchema,
+    tables: Mapping[str, ColumnarTable],
+    time_column: str,
+    n_slices: int,
+    t0: int,
+    t1: int,
+    **kw,
+) -> Tuple[ColumnarTable, List[FlatteningStats]]:
+    """Temporal slicing (paper §3.3): divide the central table by time unit,
+    flatten each slice, and append the results — bounds the working set of
+    each big join exactly like SCALPEL-Flattening's year/month slicing."""
+    central = tables[schema.central.name]
+    edges = np.linspace(t0, t1 + 1, n_slices + 1).astype(np.int32)
+    parts: List[ColumnarTable] = []
+    stats: List[FlatteningStats] = []
+    for i in range(n_slices):
+        tcol = central.columns[time_column]
+        in_slice = (tcol >= int(edges[i])) & (tcol < int(edges[i + 1]))
+        sliced = dict(tables)
+        sliced[schema.central.name] = central.filter(in_slice).compact()
+        flat_i, st = flatten_star(schema, sliced, **kw)
+        parts.append(flat_i)
+        stats.extend(st)
+    return ColumnarTable.concat(parts), stats
+
+
+# ---------------------------------------------------------------------------
+# Distributed exchange: the Spark shuffle on the TPU ICI
+# ---------------------------------------------------------------------------
+def hash_partition(
+    table: ColumnarTable, key: str, n_shards: int, per_dest_capacity: int
+) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Bucket rows by ``hash(key) % n_shards`` into a fixed send layout.
+
+    Returns ``(send_cols, send_valid, overflow)`` where each send array has
+    shape ``(n_shards, per_dest_capacity[, ...])`` ready for ``all_to_all``.
+    Rows beyond a destination's capacity are counted in ``overflow`` (they
+    would be spilled in Spark; here the capacity is sized with slack and the
+    overflow statistic is asserted zero by the monitoring layer).
+    """
+    cap = table.capacity
+    k = table.columns[key].astype(jnp.uint32)
+    # Finalizer-style integer hash (splittable, good avalanche) — cheap on VPU.
+    h = k * jnp.uint32(0x9E3779B1)
+    h = h ^ (h >> 16)
+    dest = jnp.where(table.valid, (h % jnp.uint32(n_shards)).astype(jnp.int32), n_shards)
+
+    order = jnp.argsort(dest, stable=True)           # group rows by destination
+    dsort = dest[order]
+    group_start = jnp.searchsorted(dsort, jnp.arange(n_shards + 1, dtype=dsort.dtype))
+    pos_in_group = jnp.arange(cap, dtype=jnp.int32) - group_start[dsort].astype(jnp.int32)
+    ok = (dsort < n_shards) & (pos_in_group < per_dest_capacity)
+    oob = n_shards * per_dest_capacity  # scatter target for dropped rows
+    slot = jnp.where(ok, dsort * per_dest_capacity + pos_in_group, oob)
+
+    send_valid = (
+        jnp.zeros((oob,), bool).at[slot].set(True, mode="drop").reshape(n_shards, per_dest_capacity)
+    )
+    send_cols = {}
+    for name, col in table.columns.items():
+        buf = jnp.full((oob,), _sentinel(col.dtype), col.dtype)
+        send_cols[name] = buf.at[slot].set(col[order], mode="drop").reshape(
+            n_shards, per_dest_capacity
+        )
+    overflow = ((dsort < n_shards) & ~ok).sum().astype(jnp.int32)
+    return send_cols, send_valid, overflow
+
+
+def exchange(
+    table: ColumnarTable, key: str, axis_name: str, n_shards: int, per_dest_capacity: int
+) -> Tuple[ColumnarTable, jax.Array]:
+    """One shuffle: hash-partition + ``all_to_all`` + local concatenation.
+
+    Must run inside ``shard_map`` over ``axis_name``.  After this call every
+    shard holds exactly the rows whose key hashes to it — co-partitioning the
+    join inputs the way Spark's exchange does before a sort-merge join.
+    """
+    send_cols, send_valid, overflow = hash_partition(table, key, n_shards, per_dest_capacity)
+    # bool is not a collective-friendly dtype on all backends; move as int8.
+    recv_valid = jax.lax.all_to_all(send_valid.astype(jnp.int8), axis_name, 0, 0).astype(bool)
+    recv_cols = {n: jax.lax.all_to_all(c, axis_name, 0, 0) for n, c in send_cols.items()}
+    out = ColumnarTable(
+        {n: c.reshape(-1) for n, c in recv_cols.items()},
+        recv_valid.reshape(-1),
+        recv_valid.reshape(-1).sum().astype(jnp.int32),
+    )
+    return out, overflow
+
+
+def distributed_flatten(
+    schema: StarSchema,
+    tables: Mapping[str, ColumnarTable],
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "data",
+    slack: float = 2.0,
+    min_per_dest: int = 64,
+    expand_capacity: Optional[int] = None,
+):
+    """Multi-shard denormalization: shuffle every table onto the join key,
+    then flatten locally — the full SCALPEL-Flattening plan on a mesh.
+
+    Plan (mirrors Spark's physical plan for the paper's §3.3 job):
+      1. exchange central + each dimension on their join key (co-partition);
+      2. per-shard local joins (lookup/expand);
+      3. exchange the flat table on ``patient_id`` so the *output* is
+         patient-partitioned — the property that makes every downstream
+         extractor collective-free.
+
+    Returns ``(flat_table, overflow_total)``: the flat table is globally
+    row-sharded over ``axis_name`` (patient-partitioned), overflow is a
+    replicated scalar the caller asserts to be zero.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    n = mesh.shape[axis_name]
+
+    # Decompose tables into (columns, valid) — shard_map shards raw arrays;
+    # per-shard counts are recomputed locally (a global `count` scalar cannot
+    # shard over rows).  Capacities are padded to a multiple of the shard
+    # count (pad rows are invalid).
+    raw = {}
+    for name, t in tables.items():
+        cap = -(-t.capacity // n) * n
+        tp = t.pad_to(cap) if cap != t.capacity else t
+        raw[name] = ({k: v for k, v in tp.columns.items()}, tp.valid)
+
+    def plan(raw_tbls):
+        overflow = jnp.int32(0)
+        local: Dict[str, ColumnarTable] = {}
+        for name, (cols, valid) in raw_tbls.items():
+            local[name] = ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+
+        # Spark physical plan: exchange both sides of every join onto the join
+        # key, local join, repeat — then one final exchange onto patient_id.
+        # Partitioning-aware (Spark's EnsureRequirements): an exchange is
+        # skipped when the table is already hash-partitioned on the key —
+        # re-exchanging on the same key would funnel every row to one
+        # destination.
+        flat = local[schema.central.name]
+        flat_pkey = None  # current partitioning key of `flat` (None = arbitrary)
+        for edge in schema.joins:
+            right = local[edge.right]
+            if flat_pkey != edge.left_key:
+                per_l = max(min_per_dest, int(flat.capacity * slack / n))
+                flat, ov1 = exchange(flat, edge.left_key, axis_name, n, per_l)
+                overflow = overflow + ov1
+                flat_pkey = edge.left_key
+            per_r = max(min_per_dest, int(right.capacity * slack / n))
+            right, ov2 = exchange(right, edge.right_key, axis_name, n, per_r)
+            overflow = overflow + ov2
+            if edge.one_to_many:
+                cap = expand_capacity or int((flat.capacity + right.capacity) * 1.5)
+                flat, st = expand_join(flat, right, edge.left_key, edge.right_key, cap)
+            else:
+                flat, st = lookup_join(flat, right, edge.left_key, edge.right_key)
+            overflow = overflow + st.overflow
+
+        if schema.patient_key in flat.columns and flat_pkey != schema.patient_key:
+            flat, ov = exchange(
+                flat, schema.patient_key, axis_name, n,
+                max(min_per_dest, int(flat.capacity * slack / n)),
+            )
+            overflow = overflow + ov
+        return (dict(flat.columns), flat.valid), jax.lax.psum(overflow, axis_name)
+
+    shard_fn = jax.shard_map(
+        plan,
+        mesh=mesh,
+        in_specs=(P(axis_name),),   # pytree prefix: every table row-sharded
+        out_specs=(P(axis_name), P()),
+        check_vma=False,
+    )
+    (cols, valid), overflow = shard_fn(raw)
+    flat = ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+    return flat, overflow

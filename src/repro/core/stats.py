@@ -1,0 +1,334 @@
+"""scalpel.stats analogue: patient-centric and event-centric descriptive
+statistics over cohorts (paper §3.5 — ">25 statistics", cached, pluggable).
+
+Each statistic is a pure function ``(cohort, patients|events) -> dict`` whose
+heavy part is jit-compiled; a tiny registry makes adding a custom statistic a
+one-liner, mirroring the paper's "adding a custom one being very easy".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cohort import Cohort
+from repro.core.columnar import ColumnarTable, is_null
+from repro.core.events import Category
+
+__all__ = ["STATISTICS", "register", "compute", "report", "distribution_by_gender_age_bucket"]
+
+STATISTICS: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        STATISTICS[name] = fn
+        return fn
+    return deco
+
+
+def _cohort_patient_mask(cohort: Cohort, patients: ColumnarTable) -> jax.Array:
+    mask = cohort.subjects_mask()
+    idx = jnp.clip(patients.columns["patient_id"], 0, cohort.n_patients - 1)
+    return patients.valid & mask[idx]
+
+
+# -- patient-centric ----------------------------------------------------------
+@register("gender_distribution")
+def gender_distribution(cohort: Cohort, patients: ColumnarTable, **_) -> Dict:
+    m = _cohort_patient_mask(cohort, patients)
+    g = patients.columns["gender"]
+    male = (m & (g == 1)).sum()
+    female = (m & (g == 2)).sum()
+    return {"male": int(male), "female": int(female)}
+
+
+@register("age_buckets")
+def age_buckets(cohort: Cohort, patients: ColumnarTable, ref_date: int = 14_600,
+                bucket_years: int = 10, n_buckets: int = 11, **_) -> Dict:
+    m = _cohort_patient_mask(cohort, patients)
+    age = (ref_date - patients.columns["birth_date"]) // 365
+    b = jnp.clip(age // bucket_years, 0, n_buckets - 1)
+    hist = jax.ops.segment_sum(m.astype(jnp.int32), b, num_segments=n_buckets)
+    return {f"{i*bucket_years}-{(i+1)*bucket_years-1}": int(hist[i]) for i in range(n_buckets)}
+
+
+@register("mortality")
+def mortality(cohort: Cohort, patients: ColumnarTable, **_) -> Dict:
+    m = _cohort_patient_mask(cohort, patients)
+    dead = m & ~is_null(patients.columns["death_date"])
+    return {"dead": int(dead.sum()), "alive": int((m & ~dead).sum())}
+
+
+# -- event-centric ------------------------------------------------------------
+def _cohort_events(cohort: Cohort) -> ColumnarTable:
+    if cohort.events is None:
+        raise ValueError(f"cohort {cohort.name} carries no events")
+    return cohort.events
+
+
+@register("events_per_category")
+def events_per_category(cohort: Cohort, *_, **__) -> Dict:
+    ev = _cohort_events(cohort)
+    cat = jnp.clip(ev.columns["category"], 0, 15)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), cat, num_segments=16)
+    return {Category.NAMES.get(i, str(i)): int(hist[i]) for i in range(16) if int(hist[i])}
+
+
+@register("events_per_patient")
+def events_per_patient(cohort: Cohort, *_, **__) -> Dict:
+    ev = _cohort_events(cohort)
+    seg = jnp.where(ev.valid, ev.columns["patient_id"], cohort.n_patients)
+    per = jax.ops.segment_sum(
+        jnp.ones_like(seg), jnp.clip(seg, 0, cohort.n_patients), cohort.n_patients + 1
+    )[: cohort.n_patients]
+    has = per > 0
+    total = per.sum()
+    n = has.sum()
+    return {
+        "patients_with_events": int(n),
+        "mean": float(total / jnp.maximum(n, 1)),
+        "max": int(per.max()),
+    }
+
+
+@register("events_per_month")
+def events_per_month(cohort: Cohort, *_, t0: int = 14_600, n_months: int = 37, **__) -> Dict:
+    ev = _cohort_events(cohort)
+    m = jnp.clip((ev.columns["start"] - t0) // 30, 0, n_months - 1)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), m, num_segments=n_months)
+    return {"per_month": np.asarray(hist).tolist()}
+
+
+@register("top_values")
+def top_values(cohort: Cohort, *_, k: int = 10, n_codes: int = 4096, **__) -> Dict:
+    ev = _cohort_events(cohort)
+    v = jnp.clip(ev.columns["value"], 0, n_codes - 1)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), v, num_segments=n_codes)
+    top = jnp.argsort(-hist)[:k]
+    return {int(c): int(hist[c]) for c in np.asarray(top) if int(hist[c]) > 0}
+
+
+# -- driver -------------------------------------------------------------------
+def compute(cohort: Cohort, patients: Optional[ColumnarTable] = None,
+            names: Optional[list] = None, **kw) -> Dict[str, Dict]:
+    out = {}
+    for name in names or list(STATISTICS):
+        fn = STATISTICS[name]
+        try:
+            out[name] = fn(cohort, patients, **kw)
+        except (ValueError, TypeError):
+            continue  # statistic not applicable (e.g. no events attached)
+    return out
+
+
+def report(cohort: Cohort, patients: Optional[ColumnarTable] = None, **kw) -> str:
+    """Automatic textual report (the paper's automated audit reports)."""
+    stats = compute(cohort, patients, **kw)
+    lines = [f"cohort {cohort.name!r}: {cohort.subject_count()} subjects",
+             f"  {cohort.description}"]
+    for name, d in stats.items():
+        lines.append(f"  [{name}]")
+        for k, v in d.items():
+            lines.append(f"    {k}: {v}")
+    return "\n".join(lines)
+
+
+def distribution_by_gender_age_bucket(cohort: Cohort, patients: ColumnarTable,
+                                      ref_date: int = 14_600) -> Dict:
+    """The Supplementary-A figure: age-bucket histogram split by gender."""
+    out = {}
+    for gname, gval in (("male", 1), ("female", 2)):
+        m = _cohort_patient_mask(cohort, patients) & (patients.columns["gender"] == gval)
+        age = (ref_date - patients.columns["birth_date"]) // 365
+        b = jnp.clip(age // 10, 0, 10)
+        hist = jax.ops.segment_sum(m.astype(jnp.int32), b, num_segments=11)
+        out[gname] = np.asarray(hist).tolist()
+    return out
+
+
+# -- extended statistics battery (paper: ">25 Patient-centric or
+# Event-centric statistics") ---------------------------------------------------
+def _per_patient_counts(cohort: Cohort) -> jax.Array:
+    ev = _cohort_events(cohort)
+    seg = jnp.where(ev.valid, ev.columns["patient_id"], cohort.n_patients)
+    return jax.ops.segment_sum(
+        jnp.ones_like(seg), jnp.clip(seg, 0, cohort.n_patients),
+        cohort.n_patients + 1)[: cohort.n_patients]
+
+
+@register("age_mean")
+def age_mean(cohort: Cohort, patients: ColumnarTable, ref_date: int = 14_600, **_):
+    m = _cohort_patient_mask(cohort, patients)
+    age = (ref_date - patients.columns["birth_date"]) / 365.0
+    n = jnp.maximum(m.sum(), 1)
+    mean = jnp.where(m, age, 0).sum() / n
+    var = jnp.where(m, (age - mean) ** 2, 0).sum() / n
+    return {"mean": float(mean), "std": float(jnp.sqrt(var))}
+
+
+@register("subject_count")
+def subject_count(cohort: Cohort, *_, **__):
+    return {"subjects": cohort.subject_count()}
+
+
+@register("events_total")
+def events_total(cohort: Cohort, *_, **__):
+    return {"events": int(_cohort_events(cohort).count)}
+
+
+@register("events_per_patient_percentiles")
+def events_per_patient_percentiles(cohort: Cohort, *_, **__):
+    per = np.asarray(_per_patient_counts(cohort))
+    per = per[per > 0]
+    if per.size == 0:
+        return {"p50": 0, "p90": 0, "p99": 0}
+    return {f"p{p}": int(np.percentile(per, p)) for p in (50, 90, 99)}
+
+
+@register("distinct_values")
+def distinct_values(cohort: Cohort, *_, n_codes: int = 65_536, **__):
+    ev = _cohort_events(cohort)
+    v = jnp.clip(ev.columns["value"], 0, n_codes - 1)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), v, num_segments=n_codes)
+    return {"distinct": int((hist > 0).sum())}
+
+
+@register("first_event_date")
+def first_event_date(cohort: Cohort, *_, **__):
+    ev = _cohort_events(cohort)
+    s = jnp.where(ev.valid, ev.columns["start"], 2_000_000_000)
+    return {"min_start": int(s.min())}
+
+
+@register("last_event_date")
+def last_event_date(cohort: Cohort, *_, **__):
+    ev = _cohort_events(cohort)
+    s = jnp.where(ev.valid, ev.columns["start"], -2_000_000_000)
+    return {"max_start": int(s.max())}
+
+
+@register("event_duration")
+def event_duration(cohort: Cohort, *_, **__):
+    from repro.core.columnar import is_null as _is_null
+
+    ev = _cohort_events(cohort)
+    longi = ev.valid & ~_is_null(ev.columns["end"])
+    dur = jnp.where(longi, ev.columns["end"] - ev.columns["start"], 0)
+    n = jnp.maximum(longi.sum(), 1)
+    return {"longitudinal": int(longi.sum()), "mean_days": float(dur.sum() / n)}
+
+
+@register("weight_total")
+def weight_total(cohort: Cohort, *_, **__):
+    ev = _cohort_events(cohort)
+    return {"weight_sum": float(jnp.where(ev.valid, ev.columns["weight"], 0).sum())}
+
+
+@register("events_by_gender")
+def events_by_gender(cohort: Cohort, patients: ColumnarTable, **_):
+    ev = _cohort_events(cohort)
+    pid = jnp.clip(ev.columns["patient_id"], 0, cohort.n_patients - 1)
+    pidx = jnp.where(patients.valid, patients.columns["patient_id"], cohort.n_patients)
+    g_dense = jnp.zeros((cohort.n_patients,), jnp.int32).at[pidx].set(
+        patients.columns["gender"], mode="drop")
+    g = g_dense[pid]
+    male = (ev.valid & (g == 1)).sum()
+    female = (ev.valid & (g == 2)).sum()
+    return {"male_events": int(male), "female_events": int(female)}
+
+
+@register("events_per_year")
+def events_per_year(cohort: Cohort, *_, t0: int = 14_600, **__):
+    ev = _cohort_events(cohort)
+    y = jnp.clip((ev.columns["start"] - t0) // 365, 0, 3)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), y, num_segments=4)
+    return {f"year_{i}": int(hist[i]) for i in range(4)}
+
+
+@register("group_distribution")
+def group_distribution(cohort: Cohort, *_, n_groups: int = 16, **__):
+    ev = _cohort_events(cohort)
+    g = jnp.clip(ev.columns["group_id"], 0, n_groups - 1)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), g, num_segments=n_groups)
+    return {int(i): int(hist[i]) for i in range(n_groups) if int(hist[i])}
+
+
+@register("patients_without_events")
+def patients_without_events(cohort: Cohort, *_, **__):
+    per = _per_patient_counts(cohort)
+    mask = cohort.subjects_mask()
+    return {"in_cohort_without_events": int((mask & (per == 0)).sum())}
+
+
+@register("mean_gap_days")
+def mean_gap_days(cohort: Cohort, *_, **__):
+    from repro.core.events import sort_events as _sort
+
+    ev = _sort(_cohort_events(cohort))
+    pid = ev.columns["patient_id"]
+    start = ev.columns["start"]
+    same = jnp.concatenate([jnp.zeros((1,), bool),
+                            (pid[1:] == pid[:-1]) & ev.valid[:-1]]) & ev.valid
+    prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), start[:-1]])
+    gaps = jnp.where(same, start - prev, 0)
+    n = jnp.maximum(same.sum(), 1)
+    return {"mean_gap": float(gaps.sum() / n)}
+
+
+@register("mortality_rate")
+def mortality_rate(cohort: Cohort, patients: ColumnarTable, **_):
+    from repro.core.columnar import is_null as _is_null
+
+    m = _cohort_patient_mask(cohort, patients)
+    dead = (m & ~_is_null(patients.columns["death_date"])).sum()
+    return {"rate": float(dead / jnp.maximum(m.sum(), 1))}
+
+
+@register("gender_ratio")
+def gender_ratio(cohort: Cohort, patients: ColumnarTable, **_):
+    d = gender_distribution(cohort, patients)
+    tot = max(d["male"] + d["female"], 1)
+    return {"male_fraction": round(d["male"] / tot, 4)}
+
+
+@register("value_range")
+def value_range(cohort: Cohort, *_, **__):
+    ev = _cohort_events(cohort)
+    v = ev.columns["value"]
+    return {"min": int(jnp.where(ev.valid, v, 2**30).min()),
+            "max": int(jnp.where(ev.valid, v, -2**30).max())}
+
+
+@register("events_per_category_per_patient")
+def events_per_category_per_patient(cohort: Cohort, *_, **__):
+    ev = _cohort_events(cohort)
+    cat = jnp.clip(ev.columns["category"], 0, 15)
+    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), cat, num_segments=16)
+    n = max(cohort.subject_count(), 1)
+    return {Category.NAMES.get(i, str(i)): round(float(hist[i]) / n, 3)
+            for i in range(16) if int(hist[i])}
+
+
+@register("age_at_first_event")
+def age_at_first_event(cohort: Cohort, patients: ColumnarTable, **_):
+    from repro.core.transformers import observation_period as _obs
+
+    ev = _cohort_events(cohort)
+    obs = _obs(ev, cohort.n_patients)
+    pidx = jnp.where(patients.valid, patients.columns["patient_id"], cohort.n_patients)
+    birth = jnp.zeros((cohort.n_patients,), jnp.int32).at[pidx].set(
+        patients.columns["birth_date"], mode="drop")
+    age = (obs.columns["start"] - birth) / 365.0
+    n = jnp.maximum(obs.valid.sum(), 1)
+    return {"mean": float(jnp.where(obs.valid, age, 0).sum() / n)}
+
+
+@register("top_patients_by_events")
+def top_patients_by_events(cohort: Cohort, *_, k: int = 5, **__):
+    per = np.asarray(_per_patient_counts(cohort))
+    top = np.argsort(-per)[:k]
+    return {int(p): int(per[p]) for p in top if per[p] > 0}

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (
+    SyntheticConfig, generate_dcir, generate_pmsi, generate_snds,
+    generate_ssr, generate_had, generate_ir_imb,
+)
+from repro.data.io import save_columnar, load_columnar, csv_size_bytes, columnar_size_bytes

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (
+    data_axes, param_shardings, batch_shardings, cache_shardings,
+    opt_state_shardings,
+)

@@ -1,0 +1,55 @@
+"""Sharding hints: mesh-aware ``with_sharding_constraint`` helpers callable
+from model code without plumbing the mesh through every layer.
+
+Inside a ``jax.set_mesh(mesh)`` scope the ambient abstract mesh exposes the
+axis names; outside any mesh (unit tests, single-device smoke runs) every
+helper is a no-op, so model code can sprinkle constraints freely.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["axis", "dp_axes", "constrain"]
+
+
+def _mesh_axes() -> Tuple[str, ...]:
+    m = jax.sharding.get_abstract_mesh()
+    return tuple(m.axis_names) if m is not None and not m.empty else ()
+
+
+def axis(name: str) -> Optional[str]:
+    """`name` if the ambient mesh has it, else None (spec entry no-op)."""
+    return name if name in _mesh_axes() else None
+
+
+def dp_axes():
+    """The data-parallel axes of the ambient mesh ('pod'+'data')."""
+    axes = tuple(a for a in ("pod", "data") if a in _mesh_axes())
+    return axes if axes else None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint iff an ambient mesh exists and the spec'd
+    axes divide; otherwise identity."""
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    m = jax.sharding.get_abstract_mesh()
+    norm = []
+    for dim, s in enumerate(spec):
+        entry = tuple(a for a in ((s,) if isinstance(s, (str, type(None))) else s)
+                      if a is not None and a in axes)
+        if not entry:
+            norm.append(None)
+            continue
+        size = 1
+        for a in entry:
+            size *= m.shape[a]
+        if x.shape[dim] % size != 0:
+            norm.append(None)
+            continue
+        norm.append(entry if len(entry) > 1 else entry[0])
+    return jax.lax.with_sharding_constraint(x, P(*norm))

@@ -1,0 +1,94 @@
+"""Pipeline parallelism (optional feature): GPipe schedule over a "pipe" axis.
+
+Each mesh stage holds one contiguous block of layers; microbatches stream
+through via ``collective_permute`` (the TPU ICI neighbor hop).  The schedule
+is the classic GPipe fill-drain: ``M + P - 1`` ticks for M microbatches over
+P stages, bubble fraction ``(P-1)/(M+P-1)``.
+
+This is the config-flag feature promised in DESIGN.md §5 — the production
+meshes default to DP×TP (+EP/SP); PP composes for >2-pod scale-out where a
+"pipe" axis replaces "pod".  Correctness is gated by
+``tests/test_pipeline.py`` (pipelined == sequential, fwd and grads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["gpipe", "pipeline_transformer"]
+
+
+def gpipe(stage_fn: Callable, mesh: Mesh, n_stages: int, axis_name: str = "pipe"):
+    """Build a pipelined apply: ``f(stage_params_stacked, mb_inputs) -> outs``.
+
+    stage_fn(params_one_stage, x_mb) -> y_mb  (same shape as x_mb)
+    stage_params_stacked: pytree with leading dim ``n_stages``.
+    mb_inputs: (M, mb, ...) microbatches.
+
+    Schedule: at tick t, stage s processes microbatch ``t - s`` (when in
+    range); activations hop s -> s+1 between ticks.  Output microbatch m
+    leaves the last stage at tick ``m + P - 1``.
+    """
+
+    def run(stage_params, mbs):
+        M = mbs.shape[0]
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def body(params_local, mbs_local):
+            # shard_map keeps the sharded stage dim with local extent 1
+            params_local = jax.tree.map(lambda a: a[0], params_local)
+            stage = jax.lax.axis_index(axis_name)
+            buf = jnp.zeros_like(mbs_local[0])
+            outs = jnp.zeros_like(mbs_local)
+            for t in range(M + n_stages - 1):
+                # stage 0 injects microbatch t; others consume the hop buffer
+                inject = mbs_local[min(t, M - 1)]
+                x_in = jnp.where(stage == 0, inject, buf)
+                y = stage_fn(params_local, x_in)
+                # microbatch index currently at this stage: t - stage
+                mb_idx = t - stage
+                # last stage banks its finished microbatch
+                is_last = stage == n_stages - 1
+                valid = is_last & (mb_idx >= 0) & (mb_idx < M)
+                slot = jnp.clip(mb_idx, 0, M - 1)
+                outs = jax.lax.cond(
+                    valid,
+                    lambda o: jax.lax.dynamic_update_index_in_dim(
+                        o, y, slot, 0),
+                    lambda o: o,
+                    outs,
+                )
+                buf = jax.lax.ppermute(y, axis_name, perm)
+            # everyone returns outs; only the last stage's is real — broadcast
+            # it (one hop ring: psum of masked outs)
+            outs = jnp.where(stage == n_stages - 1, outs, 0)
+            return jax.lax.psum(outs, axis_name)
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis_name), P()),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return fn(stage_params, mbs)
+
+    return run
+
+
+def pipeline_transformer(layer_fn: Callable, mesh: Mesh, n_stages: int,
+                         axis_name: str = "pipe"):
+    """Pipelined stack of identical layers: params stacked (n_stages,
+    layers_per_stage, ...); each stage scans its local layers."""
+
+    def stage_fn(stage_params, x):
+        def one(x, lp):
+            return layer_fn(lp, x), None
+
+        y, _ = jax.lax.scan(one, x, stage_params)
+        return y
+
+    return gpipe(stage_fn, mesh, n_stages, axis_name)

@@ -1,0 +1,193 @@
+"""Sharding rules: DP / TP / EP / SP layouts for every architecture.
+
+The production mesh is (data, model) = (16, 16) per pod, with an outer "pod"
+axis across pods (launch/mesh.py).  Rules:
+
+  * DP   — batch over ("pod", "data"); gradients all-reduce hierarchically.
+  * TP   — Megatron column/row pairs: projections' *output* features on
+           "model" for QKV/wi, *input* features for wo/wo_f; vocab on "model"
+           for embed/lm_head (padded to divide); a dim that doesn't divide the
+           axis stays unsharded and the SPMD partitioner picks the collective.
+  * EP   — MoE expert dim on "model" (experts padded to divide).
+  * SP   — long-context decode (batch 1): KV-cache *sequence* on the data
+           axis (and model axis when KV heads don't divide), so attention
+           reduces over shards (ring-attention-style partial softmax, done by
+           the partitioner).
+  * ZeRO-1 — optimizer moments additionally sharded over "data" on the
+           largest divisible dim.
+
+Rules are name/shape driven over the params pytree (scanned periods carry a
+leading stacking dim, handled by rank offset).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+__all__ = [
+    "data_axes",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "opt_state_shardings",
+]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that play the DP role (pod+data when multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+_COL = ("wq", "wk", "wv", "wi", "wr", "wgate", "wx", "shared_i", "wog",
+        "in_i", "in_f", "in_z", "in_o")
+_ROW = ("wo_f", "wo_r", "wo_m", "wo_s", "shared_o")
+
+
+def _param_rule(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                mesh: Mesh, stacked: bool) -> P:
+    """PartitionSpec for one parameter.  `stacked`: leading period dim."""
+    lead = (None,) if stacked else ()
+    dims = shape[1:] if stacked else shape
+    name = path.split("/")[-1]
+
+    def spec(*entries):
+        return P(*(lead + entries))
+
+    # embeddings / unembedding
+    if name == "embed":
+        return spec("model" if _div(dims[0], mesh, "model") else None, None)
+    if name == "lm_head":
+        return spec(None, "model" if _div(dims[1], mesh, "model") else None)
+    if name in ("img_proj", "frontend_proj"):
+        return spec(None, "model" if _div(dims[1], mesh, "model") else None)
+
+    # MoE experts: EP on the expert dim
+    if name in ("we_i", "we_o"):
+        return spec("model" if _div(dims[0], mesh, "model") else None, None, None)
+    if name == "router":
+        return spec(None, None)
+
+    # biases / norms / scalars
+    if len(dims) <= 1:
+        return spec(*([None] * len(dims)))
+
+    # column-parallel (output features sharded)
+    if name in _COL or (name.startswith("w") and name not in _ROW):
+        return spec(None, "model" if _div(dims[1], mesh, "model") else None)
+    # row-parallel (input features sharded)
+    if name in _ROW:
+        return spec("model" if _div(dims[0], mesh, "model") else None, None)
+    # conv kernels (cw, R): shard channels
+    if name == "conv":
+        return spec(None, "model" if _div(dims[1], mesh, "model") else None)
+    # per-head tensors (H, hd, hd)
+    if len(dims) == 3:
+        return spec("model" if _div(dims[0], mesh, "model") else None, None, None)
+    return spec(*([None] * len(dims)))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_abstract: Any) -> Any:
+    """NamedSharding pytree matching the params pytree."""
+
+    def visit(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        name = pstr.split("/")[-1]
+        stacked = ("periods" in pstr) or ("enc_layers" in pstr) or ("dec_layers" in pstr)
+        spec = _param_rule(pstr, leaf.shape, cfg, mesh, stacked)
+        # sanity: rank match
+        if len(spec) > len(leaf.shape):
+            spec = P(*([None] * len(leaf.shape)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: Dict[str, jax.ShapeDtypeStruct],
+                    cell: ShapeCell) -> Dict[str, NamedSharding]:
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    out = {}
+    for name, s in specs.items():
+        if s.ndim == 0:
+            out[name] = NamedSharding(mesh, P())
+            continue
+        b = s.shape[0]
+        batch_spec = dp if b % dp_size == 0 else (
+            dp[-1] if b % mesh.shape[dp[-1]] == 0 else None)
+        rest = [None] * (s.ndim - 1)
+        out[name] = NamedSharding(mesh, P(batch_spec, *rest))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_abstract: Any,
+                    batch: int) -> Any:
+    """KV caches: batch on DP axes when it divides; KV heads on "model" when
+    they divide, else the *sequence* dim goes on "model" (SP).  Long-context
+    batch-1 decode: sequence is sharded over every available axis."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    tp = mesh.shape.get("model", 1)
+
+    def visit(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 4 and shape[0] == batch:        # (B, S, Hkv, hd) KV
+            b, s, h, _ = shape
+            if b % dp_size == 0 and b >= dp_size:
+                bspec = dp
+                sspec = None
+                hspec = "model" if h % tp == 0 else None
+                if hspec is None and s % tp == 0:
+                    sspec = "model"
+                return NamedSharding(mesh, P(bspec, sspec, hspec, None))
+            # batch too small (long-context): shard sequence over everything
+            axes = list(dp) + (["model"] if s % (dp_size * tp) == 0 else [])
+            if s % int(np.prod([mesh.shape[a] for a in axes])) == 0:
+                return NamedSharding(mesh, P(None, tuple(axes), None, None))
+            return NamedSharding(mesh, P(None, None, None, None))
+        if len(shape) == 5:                               # stacked (L/P, B, S, H, hd)
+            inner = visit(path, jax.ShapeDtypeStruct(shape[1:], leaf.dtype))
+            return NamedSharding(mesh, P(None, *inner.spec))
+        if len(shape) >= 1 and shape[0] == batch and batch % dp_size == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state (ZeRO-1)
+# ---------------------------------------------------------------------------
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, params_abstract: Any) -> Any:
+    """Moments/master params: params' TP sharding + the largest remaining
+    unsharded dim over "data" when divisible (ZeRO-1)."""
+    base = param_shardings(cfg, mesh, params_abstract)
+    dsz = mesh.shape.get("data", 1)
+
+    def widen(leaf, sh):
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        # choose the largest dim not already sharded
+        cand = [(leaf.shape[i], i) for i in range(len(spec)) if spec[i] is None]
+        for size, i in sorted(cand, reverse=True):
+            if size % dsz == 0 and size >= dsz:
+                spec[i] = "data"
+                break
+        return NamedSharding(sh.mesh, P(*spec))
+
+    return jax.tree.map(widen, params_abstract, base)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused cohort-bitset algebra + popcount.
+
+Cohort set operations (paper §3.5: intersection/union/difference + subject
+counts) over packed uint32 bitsets.  Fusing the bitwise op with the popcount
+reduction halves HBM traffic vs. two XLA passes — on multi-million-patient
+universes (SNDS: 66M patients -> 2M words) the op is bandwidth-bound, so this
+is a straight 2x.
+
+Grid blocks are independent; per-block partial popcounts are summed by the
+wrapper (one tiny reduction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 1024
+
+OPS = {"and": 0, "or": 1, "andnot": 2, "xor": 3}
+
+
+def _make_kernel(op: int):
+    def _kernel(a_ref, b_ref, out_ref, pc_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        if op == 0:
+            r = a & b
+        elif op == 1:
+            r = a | b
+        elif op == 2:
+            r = a & ~b
+        else:
+            r = a ^ b
+        out_ref[...] = r
+        pc_ref[0] = jax.lax.population_count(r).astype(jnp.int32).sum()
+
+    return _kernel
+
+
+def bitset_op_popcount(a: jax.Array, b: jax.Array, op: str, block: int = DEFAULT_BLOCK,
+                       interpret: bool = True):
+    """Fused ``(a OP b, popcount(a OP b) per block)``; n % block == 0."""
+    n = a.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _make_kernel(OPS[op]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda g: (g,)),
+            pl.BlockSpec((block,), lambda g: (g,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), a.dtype),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused predicate + block-local stream compaction.
+
+The extractor hot path (paper Fig. 2): after mask algebra, the single
+materialization is compacting surviving rows to the front.  On GPU this is a
+warp-scan + scattered writes; TPUs have no efficient in-register scatter, so
+the TPU-native formulation is:
+
+  * per block: exclusive prefix-sum of the keep-mask gives each surviving row
+    its target slot; the in-block permutation is realized as a broadcast
+    compare (slot == target) + masked max-reduction over the row axis — an
+    O(B²) VPU sweep that stays entirely in VMEM and beats gather/scatter on
+    the MXU-era memory system for B ≤ 512;
+  * per block count is emitted so the (cheap) cross-block stitch — one gather
+    with offsets = cumsum(counts) — runs as a single fused XLA op in the
+    wrapper (``ops.filter_compact``).
+
+Grid iterations are independent (`parallel` semantics): this kernel scales to
+arbitrarily long columns and is the per-shard body of the distributed
+extraction (each mesh shard compacts its patient partition locally).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 256
+_INT_MIN = -2_147_483_648
+
+
+def _kernel(vals_ref, mask_ref, out_ref, cnt_ref):
+    v = vals_ref[...]          # (B,) values
+    m = mask_ref[...] != 0     # (B,) keep mask (int8 on the wire)
+    B = v.shape[0]
+
+    keep = m.astype(jnp.int32)
+    tgt = jnp.cumsum(keep) - 1                     # target slot per kept row
+    slots = jax.lax.broadcasted_iota(jnp.int32, (B, B), 0)   # out slot j
+    rows = jax.lax.broadcasted_iota(jnp.int32, (B, B), 1)    # in row i
+    sel = (tgt[None, :] == slots) & m[None, :]     # (j, i) one-hot per slot
+
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        fill = jnp.asarray(-jnp.inf, v.dtype)
+        picked = jnp.where(sel, v[None, :], fill).max(axis=1)
+        empty = jnp.asarray(0, v.dtype)
+    else:
+        picked = jnp.where(sel, v[None, :], jnp.asarray(_INT_MIN, v.dtype)).max(axis=1)
+        empty = jnp.asarray(0, v.dtype)
+
+    cnt = keep.sum()
+    lane = jax.lax.broadcasted_iota(jnp.int32, (B,), 0)
+    out_ref[...] = jnp.where(lane < cnt, picked, empty)
+    cnt_ref[0] = cnt
+
+
+def filter_compact_blocks(vals: jax.Array, mask: jax.Array, block: int = DEFAULT_BLOCK,
+                          interpret: bool = True):
+    """Block-compact ``vals`` by ``mask``.
+
+    Returns ``(block_vals, block_counts)`` with ``block_vals[g]`` holding the
+    ``block_counts[g]`` surviving rows of grid block ``g`` at its front.
+    Input length must be a multiple of ``block`` (wrapper pads).
+    """
+    n = vals.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda g: (g,)),
+            pl.BlockSpec((block,), lambda g: (g,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), vals.dtype),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals, mask.astype(jnp.int8))

@@ -1,0 +1,125 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper pads inputs to kernel-aligned sizes, invokes the kernel, and
+performs the (cheap) cross-block stitches.  ``interpret`` defaults to True
+unless running on a real TPU backend — the kernels are TPU-targeted and
+validated in interpret mode on CPU (container constraint).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import filter_compact as _fc
+from repro.kernels import segment_scan as _ss
+from repro.kernels import bitset_ops as _bo
+from repro.kernels import hash_partition as _hp
+from repro.kernels import swa_attention as _swa
+
+__all__ = [
+    "default_interpret",
+    "filter_compact",
+    "segmented_scan",
+    "bitset_op",
+    "hash_partition_plan",
+    "flash_attention",
+]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, fill=0):
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((p,) + x.shape[1:], fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def filter_compact(vals: jax.Array, mask: jax.Array, block: int = 256,
+                   interpret: bool | None = None):
+    """Compact ``vals[mask]`` to the front; returns (vals_out, count).
+
+    Kernel does block-local compaction; the cross-block stitch is a single
+    gather driven by cumsum of per-block counts.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    n = vals.shape[0]
+    vp = _pad_to(vals, block)
+    mp = _pad_to(mask.astype(bool), block, fill=False)
+    blocks, counts = _fc.filter_compact_blocks(vp, mp, block=block, interpret=interpret)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    total = offs[-1]
+    pos = jnp.arange(vp.shape[0], dtype=jnp.int32)
+    blk = jnp.clip(jnp.searchsorted(offs, pos, side="right") - 1, 0, counts.shape[0] - 1)
+    src = blk * block + (pos - offs[blk])
+    out = jnp.where(pos < total, blocks[jnp.clip(src, 0, vp.shape[0] - 1)],
+                    jnp.asarray(0, vals.dtype))
+    return out[:n], jnp.minimum(total, n)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segmented_scan(flags: jax.Array, vals: jax.Array, block: int = 512,
+                   interpret: bool | None = None):
+    """Inclusive segmented (min, max, count) scan; flags start runs."""
+    interpret = default_interpret() if interpret is None else interpret
+    n = vals.shape[0]
+    fp = _pad_to(flags.astype(bool), block, fill=True)
+    vp = _pad_to(vals, block)
+    mn, mx, ct = _ss.segmented_scan(fp, vp, block=block, interpret=interpret)
+    return mn[:n], mx[:n], ct[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block", "interpret"))
+def bitset_op(a: jax.Array, b: jax.Array, op: str, block: int = 1024,
+              interpret: bool | None = None):
+    """Fused bitwise op + total popcount; returns (words, count)."""
+    interpret = default_interpret() if interpret is None else interpret
+    n = a.shape[0]
+    ap = _pad_to(a, block)
+    bp = _pad_to(b, block)
+    words, partial = _bo.bitset_op_popcount(ap, bp, op, block=block, interpret=interpret)
+    return words[:n], partial.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("n_dest", "block", "interpret"))
+def hash_partition_plan(keys: jax.Array, valid: jax.Array, n_dest: int, block: int = 512,
+                        interpret: bool | None = None):
+    """Shuffle plan: (dest, rank-within-block, per-block histograms)."""
+    interpret = default_interpret() if interpret is None else interpret
+    n = keys.shape[0]
+    kp = _pad_to(keys, block)
+    vp = _pad_to(valid.astype(bool), block, fill=False)
+    dest, rank, hist = _hp.hash_partition_plan(kp, vp, n_dest, block=block, interpret=interpret)
+    return dest[:n], rank[:n], hist
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int | None = None, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """Flash attention (GQA, causal, sliding window); pads seq dims to blocks."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if q_offset is None:
+        q_offset = Skv - Sq
+    bq_ = min(bq, max(8, Sq))
+    bk_ = min(bk, max(8, Skv))
+    pq = (-Sq) % bq_
+    pk = (-Skv) % bk_
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    # kv_len masks padded KV rows in-kernel; padded q rows are discarded on
+    # unpad below.
+    out = _swa.flash_swa_attention(
+        qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+        kv_len=Skv, bq=bq_, bk=bk_, interpret=interpret,
+    )
+    return out[:, :, :Sq, :]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` mirrors its kernel's semantics exactly; tests sweep shapes and
+dtypes asserting ``assert_allclose(kernel(interpret=True), ref)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BIG = jnp.int32(2_000_000_000)
+
+
+# -- filter_compact -----------------------------------------------------------
+def filter_compact_ref(vals: jax.Array, mask: jax.Array):
+    """(compacted values padded with 0, count)."""
+    idx = jnp.argsort(~mask, stable=True)
+    cnt = mask.sum().astype(jnp.int32)
+    lane = jnp.arange(vals.shape[0])
+    out = jnp.where(lane < cnt, vals[idx], jnp.asarray(0, vals.dtype))
+    return out, cnt
+
+
+# -- segmented scan -----------------------------------------------------------
+def segmented_scan_ref(flags: jax.Array, vals: jax.Array):
+    """Inclusive running (min, max, count) with reset where flags is True.
+
+    Sequential oracle via lax.scan (ground truth for the log-step kernel).
+    """
+
+    def body(carry, x):
+        cmin, cmax, ccnt = carry
+        f, v = x
+        nmin = jnp.where(f, v, jnp.minimum(cmin, v))
+        nmax = jnp.where(f, v, jnp.maximum(cmax, v))
+        ncnt = jnp.where(f, 1, ccnt + 1)
+        return (nmin, nmax, ncnt), (nmin, nmax, ncnt)
+
+    init = (_BIG.astype(vals.dtype), (-_BIG).astype(vals.dtype), jnp.int32(0))
+    _, (mn, mx, ct) = jax.lax.scan(body, init, (flags.astype(bool), vals))
+    return mn, mx, ct
+
+
+# -- bitset ops ----------------------------------------------------------------
+def bitset_op_ref(a: jax.Array, b: jax.Array, op: str):
+    r = {"and": a & b, "or": a | b, "andnot": a & ~b, "xor": a ^ b}[op]
+    return r, jax.lax.population_count(r).astype(jnp.int32).sum()
+
+
+# -- hash partition --------------------------------------------------------------
+def hash_partition_plan_ref(keys: jax.Array, valid: jax.Array, n_dest: int, block: int):
+    """(dest, in-block rank, per-block histogram) with the same fixture hash."""
+    k = keys.astype(jnp.uint32)
+    h = k * jnp.uint32(0x9E3779B1)
+    h = h ^ (h >> 16)
+    dest = jnp.where(valid, (h % jnp.uint32(n_dest)).astype(jnp.int32), jnp.int32(n_dest))
+
+    n = keys.shape[0]
+    g = n // block
+    d2 = dest.reshape(g, block)
+    onehot = (d2[:, :, None] == jnp.arange(n_dest)[None, None, :]).astype(jnp.int32)
+    excl = jnp.cumsum(onehot, axis=1) - onehot
+    rank = jnp.where(valid.reshape(g, block), (excl * onehot).sum(-1), 0).reshape(-1)
+    hist = onehot.sum(axis=1)
+    return dest, rank, hist
+
+
+# -- attention ---------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=None):
+    """Dense masked attention oracle (GQA, causal, sliding window)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if q_offset is None:
+        q_offset = Skv - Sq
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible kv -> zero output (kernel convention)
+    any_vis = mask.any(axis=1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    out = jnp.where(any_vis[None, None, :, None], out, 0.0)
+    return out.astype(q.dtype)

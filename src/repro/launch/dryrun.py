@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves the distribution config is coherent without hardware: the forced
+512 host devices let ``jax.make_mesh`` build the production meshes, every
+cell's step function is ``.lower().compile()``d with ShapeDtypeStruct inputs
+(no allocation), and the compiled artifact yields the §Roofline terms:
+``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()`` (FLOPs/bytes),
+and the post-SPMD HLO text (collective bytes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeCell
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import ModelBundle, get_bundle, all_archs
+from repro.distributed.sharding import (
+    batch_shardings, cache_shardings, opt_state_shardings, param_shardings,
+)
+from repro.serving.serve_step import make_prefill_step, make_serve_step
+from repro.train.train_step import abstract_train_state, make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO."""
+    out: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s+((?:\([^)]*\))|(?:\S+))\s+(all-reduce|all-gather|"
+            r"reduce-scatter|all-to-all|collective-permute)(?:-start|-done)?\(",
+            line,
+        )
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # counted at -start
+        out[op]["count"] += 1
+        out[op]["bytes"] += _shape_bytes(type_str)
+    return out
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    hist: Dict[str, int] = {}
+    for m in re.finditer(r"=\s+(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(", hlo_text):
+        op = m.group(1)
+        hist[op] = hist.get(op, 0) + 1
+    return {k: v for k, v in sorted(hist.items(), key=lambda kv: -kv[1])[:30]}
+
+
+def _as_specs(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# Per-cell performance knobs promoted from the §Perf hillclimb.
+PERF_OVERRIDES = {
+    ("gemma3-12b", "train_4k"): {"microbatches": 4},
+    # RG-LRU associative_scan holds f32 (B,S,R) gate tensors; halving the
+    # microbatch halves them (18.3 -> fits)
+    ("recurrentgemma-2b", "train_4k"): {"microbatches": 2},
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               donate: bool = True, bundle: Optional[ModelBundle] = None):
+    """Build and lower the cell's step function; returns (lowered, meta)."""
+    bundle = bundle or get_bundle(arch)
+    cell = SHAPES[shape_name]
+    if not bundle.supports(cell):
+        return None, {"skipped": True, "reason": "full-attention arch at 500k"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = bundle.cfg
+
+    specs = bundle.input_specs(cell)
+    batch_sh = batch_shardings(cfg, mesh, specs, cell)
+
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            state = abstract_train_state(bundle)
+            p_sh = param_shardings(cfg, mesh, state["params"])
+            o_sh = {
+                "master": opt_state_shardings(cfg, mesh, state["params"]),
+                "m": opt_state_shardings(cfg, mesh, state["params"]),
+                "v": opt_state_shardings(cfg, mesh, state["params"]),
+                "step": jax.NamedSharding(mesh, jax.P()),
+            }
+            state_sh = {"params": p_sh, "opt": o_sh}
+            knobs = PERF_OVERRIDES.get((arch, shape_name), {})
+            step = make_train_step(bundle, microbatches=knobs.get("microbatches", 1))
+            meta_extra = {"microbatches": knobs.get("microbatches", 1)}
+            fn = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, jax.NamedSharding(mesh, jax.P())),
+                donate_argnums=(0,) if donate else (),
+            )
+            lowered = fn.lower(state, specs)
+        elif cell.kind == "prefill":
+            params = bundle.abstract_params()
+            p_sh = param_shardings(cfg, mesh, params)
+            step = make_prefill_step(bundle)
+            fn = jax.jit(step, in_shardings=(p_sh, batch_sh))
+            lowered = fn.lower(params, specs)
+        else:  # decode
+            params = bundle.abstract_params()
+            p_sh = param_shardings(cfg, mesh, params)
+            cache = bundle.abstract_cache(cell.global_batch, cell.seq_len)
+            c_sh = cache_shardings(cfg, mesh, cache, cell.global_batch)
+            step = make_serve_step(bundle)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, batch_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = fn.lower(params, cache, specs)
+    meta = {"mesh": dict(mesh.shape), "cell": cell.name, "arch": arch}
+    try:
+        meta.update(meta_extra)
+    except NameError:
+        pass
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    t0 = time.time()
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod)
+        if lowered is None:
+            rec.update(meta)
+            return rec
+        rec["microbatches"] = meta.get("microbatches", 1)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        txt = compiled.as_text()
+        rec["collectives"] = parse_collectives(txt)
+        rec["ops"] = op_histogram(txt)
+        rec["hlo_lines"] = txt.count("\n")
+        if keep_hlo:
+            rec["hlo"] = txt
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the matrix
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _probe_bundle(arch: str, n_periods: int) -> ModelBundle:
+    """Reduced-depth variant for while-body cost probing: XLA cost analysis
+    counts a while (scan) body ONCE regardless of trip count (verified:
+    scan flops == unroll flops / trips), so per-cell cost is reconstructed as
+       total = f(0 periods) + n_periods · (f(1 period) − f(0 periods)),
+    with chunked attention disabled in probes so the inner KV-chunk scan does
+    not hide score flops the same way.
+    """
+    import dataclasses
+
+    cfg = get_bundle(arch).cfg
+    base = cfg.first_dense_layers + (
+        (cfg.n_layers - cfg.first_dense_layers) % len(cfg.pattern))
+    n_layers = base + n_periods * len(cfg.pattern)
+    kw = {"n_layers": n_layers}
+    if cfg.is_encdec:
+        kw["n_encoder_layers"] = n_periods
+    return ModelBundle(dataclasses.replace(cfg, **kw))
+
+
+def run_cell_with_probes(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Single-pod cell + the two depth probes (for §Roofline correction)."""
+    from repro.models import layers as Lmod
+
+    rec = run_cell(arch, shape_name, multi_pod=False)
+    if not rec.get("ok"):
+        return rec
+    cfg = get_bundle(arch).cfg
+    eff = cfg.n_layers - cfg.first_dense_layers
+    rec["n_periods"] = eff // len(cfg.pattern)
+    # enc-dec cannot instantiate a 0-layer probe (empty stacked pytree);
+    # use trips (1, 2): total = f(1) + (n-1)·(f(2) - f(1))
+    levels = (1, 2) if cfg.is_encdec else (0, 1)
+    rec["probe_levels"] = list(levels)
+
+    old_thresh = Lmod._CHUNKED_THRESHOLD
+    Lmod._CHUNKED_THRESHOLD = 1 << 62   # dense attention in probes
+    try:
+        probes = {}
+        for n in levels:
+            bundle = _probe_bundle(arch, n)
+            t0 = time.time()
+            try:
+                lowered, _ = lower_cell(arch, shape_name, multi_pod=False,
+                                        bundle=bundle)
+                compiled = lowered.compile()
+                ca = compiled.cost_analysis() or {}
+                probes[f"p{n}"] = {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                    "transcendentals": float(ca.get("transcendentals", 0.0)),
+                    "collectives": parse_collectives(compiled.as_text()),
+                    "compile_s": round(time.time() - t0, 1),
+                }
+            except Exception as e:  # noqa: BLE001
+                probes[f"p{n}"] = {"error": f"{type(e).__name__}: {e}"[:500]}
+        rec["probes"] = probes
+    finally:
+        Lmod._CHUNKED_THRESHOLD = old_thresh
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--probes", action="store_true",
+                    help="also compile depth probes (roofline correction)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = all_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.probes and not mp:
+                    rec = run_cell_with_probes(arch, shape)
+                else:
+                    rec = run_cell(arch, shape, mp)
+                tag = f"{arch}__{shape}__{rec['mesh']}"
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("SKIP" if rec.get("skipped")
+                          else "OK" if rec.get("ok") else "FAIL")
+                if status == "FAIL":
+                    n_fail += 1
+                    print(f"[{status}] {tag}: {rec.get('error')}", flush=True)
+                else:
+                    mem = rec.get("memory", {})
+                    print(
+                        f"[{status}] {tag} lower={rec.get('lower_s')}s "
+                        f"compile={rec.get('compile_s')}s "
+                        f"args={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+                        f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                        f"flops={rec.get('cost', {}).get('flops', 0):.3g}",
+                        flush=True,
+                    )
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod: (data, model) = (16, 16) — 256 chips (TPU v5e pod).
+Multi-pod:  (pod, data, model) = (2, 16, 16) — 512 chips, the "pod" axis
+crossing the DCN.  Functions, not module constants: importing this module must
+never touch jax device state (dryrun.py sets the forced device count before
+any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / CPU benches)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

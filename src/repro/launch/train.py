@@ -1,0 +1,144 @@
+"""Training launcher: the end-to-end driver wiring SCALPEL3 features to LMs.
+
+Pipeline: synthetic SNDS -> flatten -> extract -> tokenize (FeatureDriver) ->
+sharded train loop with checkpoint/restart.  On the container this runs small
+models on CPU (examples/train_lm.py drives it); on a real cluster the same
+code runs under the production mesh with per-host data sharding.
+
+Fault tolerance in the loop (DESIGN.md §5):
+  * data order is deterministic in (seed, step) -> restart replays exactly;
+  * AsyncCheckpointer writes sharded state in the background, atomically;
+  * on start, the latest checkpoint (if any) is restored — including onto a
+    *different* mesh (elastic restart);
+  * straggler policy: fixed-shape steps; a slow host never changes
+    collective shapes, and the launcher logs step-time outliers (the
+    backup-replica failover hook).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_bundle
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+from repro.train.checkpointing import AsyncCheckpointer, latest_step, restore_checkpoint
+
+
+def claims_token_stream(seq_len: int, batch: int, vocab: int, seed: int,
+                        n_patients: int = 512) -> Iterator[Dict[str, jax.Array]]:
+    """Deterministic batch stream from the SCALPEL3 pipeline.
+
+    Builds the full paper pipeline once (flatten -> extract -> cohort ->
+    FeatureDriver.token_sequences), then yields fixed-shape batches; batch t
+    is a pure function of (seed, t) — the determinism the restart story
+    needs."""
+    from repro.core import (
+        Cohort, DCIR_SCHEMA, FeatureDriver, TokenizerSpec, flatten_star,
+        sort_events, drug_dispenses, medical_acts_dcir,
+    )
+    from repro.core.columnar import ColumnarTable
+    from repro.data.synthetic import SyntheticConfig, generate_dcir
+
+    cfg = SyntheticConfig(n_patients=n_patients, seed=seed)
+    dcir = generate_dcir(cfg)
+    flat, _ = flatten_star(DCIR_SCHEMA, dcir)
+    drugs = drug_dispenses()(flat)
+    acts = medical_acts_dcir()(flat)
+    events = sort_events(ColumnarTable.concat([drugs, acts]))
+    cohort = Cohort.from_events("all", events, cfg.n_patients)
+    spec = TokenizerSpec.default()
+    fd = FeatureDriver(cohort)
+    toks, mask = fd.token_sequences(seq_len, spec)
+    toks = np.asarray(jnp.clip(toks, 0, vocab - 1))
+    mask = np.asarray(mask, np.float32)
+
+    step = 0
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n_patients)
+    while True:
+        idx = order[(step * batch + np.arange(batch)) % n_patients]
+        yield {
+            "tokens": jnp.asarray(toks[idx]),
+            "loss_mask": jnp.asarray(mask[idx]),
+        }
+        step += 1
+
+
+def train(arch: str, steps: int = 100, batch: int = 8, seq_len: int = 128,
+          reduced: bool = True, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, log_every: int = 10,
+          microbatches: int = 1, seed: int = 0) -> Dict[str, Any]:
+    bundle = get_bundle(arch, reduced=reduced)
+    cfg = bundle.cfg
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=20, total_steps=steps)
+    step_fn = jax.jit(
+        make_train_step(bundle, opt_cfg, microbatches=microbatches),
+        donate_argnums=(0,),
+    )
+
+    state = init_train_state(bundle, jax.random.key(seed))
+    start_step = 0
+    ckpt = None
+    if ckpt_dir:
+        ckpt = AsyncCheckpointer(ckpt_dir)
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            state, manifest = restore_checkpoint(ckpt_dir, last, state)
+            start_step = manifest["step"]
+            print(f"[restore] resumed from step {start_step}")
+
+    stream = claims_token_stream(seq_len, batch, cfg.vocab_size, seed)
+    for _ in range(start_step):  # replay the cursor deterministically
+        next(stream)
+
+    losses = []
+    step_times = []
+    for t in range(start_step, steps):
+        batch_t = next(stream)
+        t0 = time.time()
+        state, metrics = step_fn(state, batch_t)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        losses.append(loss)
+        step_times.append(dt)
+        if len(step_times) > 10:
+            med = float(np.median(step_times[-50:]))
+            if dt > 3.0 * med:
+                print(f"[straggler] step {t} took {dt:.2f}s (median {med:.2f}s)")
+        if t % log_every == 0:
+            print(f"step {t:5d} loss {loss:8.4f} ({dt*1e3:6.1f} ms)", flush=True)
+        if ckpt and (t + 1) % ckpt_every == 0:
+            ckpt.save(t + 1, state, meta={"arch": arch, "seed": seed})
+    if ckpt:
+        ckpt.wait()
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "state": state}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full (non-reduced) config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    out = train(args.arch, steps=args.steps, batch=args.batch,
+                seq_len=args.seq_len, reduced=not args.full_size,
+                ckpt_dir=args.ckpt_dir, microbatches=args.microbatches)
+    print(f"final loss: {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import ModelBundle, get_bundle, all_archs

@@ -1,0 +1,197 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+Encoder: bidirectional attention over precomputed audio-frame embeddings (the
+modality frontend is a stub per the assignment — ``input_specs`` supplies
+(B, S_src, frontend_dim) frames).  Decoder: causal self-attention +
+cross-attention to encoder memory + FFN.  Decode caches both the growing
+self-attention KV and the fixed cross-attention KV (projected once).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": jnp.zeros((d,), dtype),
+            "attn": L.attn_params(k1, cfg, dtype),
+            "norm2": jnp.zeros((d,), dtype),
+            "ffn": L.ffn_params(k2, d, cfg.d_ff, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": jnp.zeros((d,), dtype),
+            "self_attn": L.attn_params(k1, cfg, dtype),
+            "norm_x": jnp.zeros((d,), dtype),
+            "cross_attn": L.attn_params(k2, cfg, dtype, cross=True),
+            "norm2": jnp.zeros((d,), dtype),
+            "ffn": L.ffn_params(k3, d, cfg.d_ff, dtype),
+        }
+
+    ekeys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dkeys = jax.random.split(ks[1], cfg.n_layers)
+    enc = [enc_layer(k) for k in ekeys]
+    dec = [dec_layer(k) for k in dkeys]
+    return {
+        "frontend_proj": L.dense_init(ks[2], (cfg.frontend_dim, d), dtype),
+        "embed": L.dense_init(ks[3], (cfg.padded_vocab, d), dtype, scale=0.02),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": jnp.zeros((d,), dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": L.dense_init(ks[4], (d, cfg.padded_vocab), dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_src, frontend_dim) -> memory (B, S_src, d)."""
+    x = frames.astype(_dtype(cfg)) @ params["frontend_proj"]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(xc, lp):
+        h = L.rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+        out, _ = L.attention(lp["attn"], h, cfg, kind="attn",
+                             positions=positions, causal=False)
+        xc = xc + out
+        h = L.rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+        return xc + L.ffn(lp["ffn"], h), 0.0
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int, src_len: int) -> Params:
+    dtype = _dtype(cfg)
+    hd = cfg.head_dim_
+    n = cfg.n_layers
+    kv = lambda s: jnp.zeros((n, batch, s, cfg.n_kv_heads, hd), dtype)
+    return {"self_k": kv(kv_len), "self_v": kv(kv_len),
+            "cross_k": kv(src_len), "cross_v": kv(src_len)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, kv_len: int, src_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, kv_len, src_len))
+
+
+def prefill_cross(params: Params, cfg: ModelConfig, memory: jax.Array) -> Tuple:
+    """Project encoder memory into per-layer cross K/V (done once)."""
+    hd = cfg.head_dim_
+    B, S, _ = memory.shape
+
+    def body(_, lp):
+        k = (memory @ lp["cross_attn"]["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (memory @ lp["cross_attn"]["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec_layers"])
+    return ck, cv
+
+
+def decode_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                 # (B, S_dec)
+    memory: Optional[jax.Array] = None,   # (B, S_src, d) for train/prefill
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,
+    logits_slice: Optional[int] = None,
+):
+    """Decoder pass; train/prefill (cache=None, memory given) or decode step
+    (cache given, cross K/V already in cache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cache_pos is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    else:
+        positions = cache_pos + jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    hd = cfg.head_dim_
+
+    def body(carry, scanned):
+        xc = carry
+        if cache is None:
+            lp = scanned
+            h = L.rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+            out, _ = L.attention(lp["self_attn"], h, cfg, kind="attn",
+                                 positions=positions)
+            xc = xc + out
+            h = L.rmsnorm(lp["norm_x"], xc, cfg.norm_eps)
+            out, _ = L.attention(lp["cross_attn"], h, cfg, kind="attn",
+                                 positions=positions, kv_input=memory,
+                                 causal=False)
+            xc = xc + out
+            h = L.rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+            xc = xc + L.ffn(lp["ffn"], h)
+            return xc, 0.0
+        lp, sk, sv, ck, cv = scanned
+        h = L.rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+        out, (nsk, nsv) = L.attention(
+            lp["self_attn"], h, cfg, kind="attn", positions=positions,
+            cache=(sk, sv), cache_pos=cache_pos)
+        xc = xc + out
+        h = L.rmsnorm(lp["norm_x"], xc, cfg.norm_eps)
+        q = (h @ lp["cross_attn"]["wq"]).reshape(B, S, cfg.n_heads, hd)
+        out = L.sdpa(q, ck, cv, causal=False, window=0, q_positions=positions)
+        xc = xc + out @ lp["cross_attn"]["wo"]
+        h = L.rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+        xc = xc + L.ffn(lp["ffn"], h)
+        return xc, (nsk, nsv)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cache is None:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        new_cache = None
+    else:
+        x, (nsk, nsv) = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache["self_k"], cache["self_v"],
+             cache["cross_k"], cache["cross_v"]))
+        new_cache = {"self_k": nsk, "self_v": nsv,
+                     "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:, :]
+    logits = x @ params["lm_head"]
+    return logits, new_cache
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    from repro.models.lm import cross_entropy
+
+    memory = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    logits, _ = decode_forward(params, cfg, tokens, memory=memory)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((tokens.shape[0], 1), tokens.dtype)], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    return cross_entropy(logits, labels, mask, cfg.vocab_size)

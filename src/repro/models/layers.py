@@ -1,0 +1,501 @@
+"""Transformer layer library: norms, RoPE, GQA attention (full / sliding-
+window / cross), GLU FFN, and sort-based-dispatch MoE.
+
+Conventions:
+  * params are nested dicts of ``jnp`` arrays (bf16 by default); functions are
+    pure ``apply(params, x, ...)``;
+  * attention is expressed as einsums + mask algebra so the XLA SPMD
+    partitioner can shard it along batch / heads / sequence as the mesh
+    dictates (the Pallas ``swa_attention`` kernel is the TPU-serving fast
+    path, selected by ``attn_impl='pallas'``);
+  * all masks are built from ``broadcasted_iota`` comparisons with traced
+    offsets, so the same code traces for train, prefill and decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import hints
+
+Params = Dict[str, jax.Array]
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attn_params(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _proj_qkv(p: Params, x: jax.Array, cfg: ModelConfig,
+              kv_input: Optional[jax.Array] = None):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    kv_src = x if kv_input is None else kv_input
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+# score tensors larger than this (elements) switch to the chunked
+# online-softmax formulation — the flash recurrence expressed at HLO level so
+# the SPMD partitioner can still shard it (the Pallas kernel is the
+# single-chip fast path; this is the distributed-memory-safety path).
+_CHUNKED_THRESHOLD = 1 << 22          # 4M score elements per (b, h)
+_KV_CHUNK = 1024
+
+
+def _masked_scores(qg, k, q_positions, k_lo, causal, window, kv_valid_len):
+    """(B,Sq,Hkv,g,D)x(B,bk,Hkv,D) -> masked f32 scores (B,h,g,Sq,bk)."""
+    D = qg.shape[-1]
+    bk = k.shape[1]
+    Sq = qg.shape[1]
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) / (D ** 0.5)
+    kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, Sq, bk), 4)
+    qpos = q_positions[:, None, None, :, None]
+    mask = jnp.ones((1, 1, 1, Sq, bk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    if kv_valid_len is not None:
+        mask = mask & (kpos < kv_valid_len[:, None, None, None, None])
+    return jnp.where(mask, scores, -1e30)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         causal: bool, window: int, q_positions: jax.Array,
+         kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Masked attention (XLA-partitionable).
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D); q_positions: (B, Sq) absolute
+    positions of the queries in KV coordinates; kv_valid_len: (B,) or None.
+    Large score tensors use the chunked online-softmax path.
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    # NOTE (perf log iter 10, REFUTED): pinning the KV-head axis to "model"
+    # here removes the score-einsum all-reduces seen in HLO, but costs +28%
+    # memory-term in resharding transposes against the SP residual layout —
+    # net regression, reverted.  See EXPERIMENTS.md §Perf.
+
+    if Sq * Skv > _CHUNKED_THRESHOLD and Skv % _KV_CHUNK == 0 and Sq > 1:
+        return _sdpa_chunked(qg, k, v, causal=causal, window=window,
+                             q_positions=q_positions, kv_valid_len=kv_valid_len
+                             ).reshape(B, Sq, Hq * D)
+
+    scores = _masked_scores(qg, k, q_positions, 0, causal, window, kv_valid_len)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq * D)
+
+
+def _sdpa_chunked(qg, k, v, *, causal, window, q_positions, kv_valid_len):
+    """Flash recurrence over KV chunks via lax.scan (O(Sq·chunk) memory).
+
+    The chunk body is rematerialized on backward (checkpoint) so train-time
+    peak memory holds one chunk's scores, not the full (Sq, Skv) product.
+    """
+    B, Sq, Hkv, g, D = qg.shape
+    Skv = k.shape[1]
+    n_chunks = Skv // _KV_CHUNK
+    kc = k.reshape(B, n_chunks, _KV_CHUNK, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, _KV_CHUNK, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        ci, k_i, v_i = xs
+        k_lo = ci * _KV_CHUNK
+        s = _masked_scores(qg, k_i, q_positions, k_lo, causal, window,
+                           kv_valid_len)                       # (B,h,g,Sq,bk)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_i.dtype), v_i)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, D), v.dtype)
+    idx = jnp.arange(n_chunks, dtype=jnp.int32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (idx, kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # (B,Sq,Hkv,g,D)
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              kind: str, positions: jax.Array,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None,
+              kv_input: Optional[jax.Array] = None,
+              causal: bool = True):
+    """One attention mixer.  kind: 'attn' (full) or 'swa' (window).
+
+    Train/prefill: cache is None -> self-attention over x.
+    Decode: cache=(k_cache, v_cache) with layout (B, S_cache, Hkv, D);
+    ``cache_pos`` is the (traced) write position; for 'swa' the cache is a
+    ring buffer of size window and writes wrap.  Returns (out, new_cache).
+    """
+    window = cfg.window if kind == "swa" else 0
+    q, k, v = _proj_qkv(p, x, cfg, kv_input)
+    if kv_input is None:  # rope only for self-attention
+        q = rope(q, positions, cfg.rope_theta)
+        if cache is None:
+            k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+
+    if cache is not None:
+        kc, vc = cache
+        S_cache = kc.shape[1]
+        if window > 0 and S_cache == window:
+            # ring buffer: absolute position -> slot = pos % window
+            slot = cache_pos % window
+            k = rope(k, positions, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+            # positions of ring slots: slot i holds the latest pos p with
+            # p % window == i and p <= cache_pos
+            idx = jnp.arange(window, dtype=jnp.int32)
+            ring_pos = cache_pos - ((cache_pos - idx) % window)
+            # ring_pos may exceed cache_pos only by construction error; mask
+            # invalid (not yet written) slots via pos > cache_pos - window
+            out = _ring_sdpa(q, kc, vc, ring_pos, cache_pos, window)
+            new_cache = (kc, vc)
+            out = out @ p["wo"]
+            return out, new_cache
+        # full cache: write at cache_pos, attend with causal mask
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, cache_pos, 0, 0))
+        out = sdpa(q, kc, vc, causal=causal, window=window,
+                   q_positions=positions)
+        new_cache = (kc, vc)
+    else:
+        out = sdpa(q, k, v, causal=causal, window=window, q_positions=positions)
+    return out @ p["wo"], new_cache
+
+
+def _ring_sdpa(q, kc, vc, ring_pos, cache_pos, window):
+    """Attention over a ring-buffer KV: mask by true slot positions."""
+    B, Sq, Hq, D = q.shape
+    Hkv = kc.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, kc, preferred_element_type=jnp.float32
+    ) / (D ** 0.5)
+    valid = (ring_pos <= cache_pos) & (ring_pos > cache_pos - window) & (ring_pos >= 0)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(vc.dtype), vc)
+    return out.reshape(B, Sq, Hq * D)
+
+
+# ---------------------------------------------------------------------------
+# FFN (GLU) and MoE
+# ---------------------------------------------------------------------------
+def ffn_params(key, d: int, f: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, (d, 2 * f), dtype),   # fused gate||up
+        "wo_f": dense_init(k2, (f, d), dtype),
+    }
+
+
+def ffn(p: Params, x: jax.Array) -> jax.Array:
+    gu = x @ p["wi"]
+    gate, up = jnp.split(gu, 2, axis=-1)
+    return (jax.nn.silu(gate) * up) @ p["wo_f"]
+
+
+def moe_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.padded_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "we_i": dense_init(ks[1], (e, d, 2 * f), dtype),
+        "we_o": dense_init(ks[2], (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2 = jax.random.split(ks[3])
+        p["shared_i"] = dense_init(k1, (d, 2 * fs), dtype)
+        p["shared_o"] = dense_init(k2, (fs, d), dtype)
+    return p
+
+
+def _hierarchical_rank(onehot: jax.Array, flat_e: jax.Array,
+                       block: int = 1024) -> jax.Array:
+    """Exclusive per-expert rank of each row, two-level:
+
+      1. block histograms -> exclusive cumsum over the (tiny) block axis;
+      2. within-block exclusive prefix via a log-step Hillis-Steele scan
+         (static shifts; linear work, VPU-friendly — the same scheme as the
+         ``segment_scan`` Pallas kernel).
+    """
+    n, e = onehot.shape
+    pad = (-n) % block
+    oh = jnp.pad(onehot, ((0, pad), (0, 0)))
+    nb = oh.shape[0] // block
+    ohb = oh.reshape(nb, block, e)
+    hist = ohb.sum(axis=1)                                   # (nb, E)
+    block_off = jnp.cumsum(hist, axis=0) - hist              # (nb, E) exclusive
+
+    intra = ohb
+    d = 1
+    while d < block:
+        shifted = jnp.pad(intra, ((0, 0), (d, 0), (0, 0)))[:, :block, :]
+        intra = intra + shifted
+        d *= 2
+    intra_excl = intra - ohb                                 # exclusive in-block
+
+    excl = (block_off[:, None, :] + intra_excl).reshape(-1, e)[:n]
+    return jnp.take_along_axis(
+        excl, flat_e[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Top-k MoE with capacity dispatch.
+
+    Two paths:
+      * ambient mesh with a "model" axis -> explicit-EP ``shard_map`` path
+        (``_moe_ffn_ep``): activations are DP-sharded/TP-replicated, so each
+        expert shard *selects* its tokens locally (dispatch is collective-
+        free) and the combine is ONE psum over "model" — the all-reduce
+        Megatron TP needs after an FFN anyway.  This replaced a scatter-into-
+        sharded-buffer formulation the SPMD partitioner turned into full
+        dispatch-buffer all-reduces (~45 GiB/layer measured).
+      * no mesh (unit tests, single chip) -> dense-buffer path below.
+    """
+    if hints.axis("model"):
+        return _moe_ffn_ep(p, x, cfg)
+    return _moe_ffn_dense(p, x, cfg)
+
+
+def _moe_ffn_ep(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    import numpy as _np
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    dp = hints.dp_axes()
+    B, S, d = x.shape
+    tp = mesh.shape["model"]
+    e_pad, e_real, k = cfg.padded_experts, cfg.n_experts, cfg.top_k
+    E_loc = e_pad // tp
+    dp_size = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if B % dp_size != 0:
+        dp = None
+        dp_size = 1
+    # per-group capacity (GShard group = one data shard's tokens)
+    T_loc = B * S // dp_size
+    C_loc = int(cfg.capacity_factor * k * T_loc / e_real) + 1
+
+    has_shared = "shared_i" in p
+    # sequence-parallel I/O: residuals arrive seq-sharded over "model"
+    # (Megatron-SP); gather once on entry, reduce-scatter on exit
+    sp = S % tp == 0 and S > 1
+
+    def body(xb, router, we_i, we_o, *shared):
+        if sp:
+            xb = jax.lax.all_gather(xb, "model", axis=1, tiled=True)
+        Tl = xb.shape[0] * xb.shape[1]
+        xt = xb.reshape(Tl, d)
+        logits = xt.astype(jnp.float32) @ router
+        if e_pad != e_real:
+            logits = jnp.where(jnp.arange(e_pad)[None, :] >= e_real, -1e30, logits)
+        gates, experts = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(gates, axis=-1).astype(xb.dtype)
+
+        flat_e = experts.reshape(-1)
+        onehot = (flat_e[:, None] == jnp.arange(e_pad, dtype=flat_e.dtype)[None, :]
+                  ).astype(jnp.int32)
+        rank = _hierarchical_rank(onehot, flat_e)
+        keep = rank < C_loc
+
+        e_lo = jax.lax.axis_index("model").astype(jnp.int32) * E_loc
+        local = (flat_e >= e_lo) & (flat_e < e_lo + E_loc) & keep
+        slot = jnp.where(local, (flat_e - e_lo) * C_loc + rank, E_loc * C_loc)
+        token_idx = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), k)
+        # slot-indexed dispatch: invert (choice -> slot) into (slot -> token)
+        # so no (T·k, d) intermediate is ever materialized — buffers stay
+        # (E_loc·C_loc, d)
+        oob = E_loc * C_loc
+        src = jnp.full((oob + 1,), Tl, jnp.int32).at[slot].set(
+            token_idx, mode="drop")[:oob]
+        w_slot = jnp.zeros((oob + 1,), xb.dtype).at[slot].set(
+            gates.reshape(-1), mode="drop")[:oob]
+        occupied = src < Tl
+        buf = jnp.where(occupied[:, None],
+                        xt[jnp.clip(src, 0, Tl - 1)], 0).reshape(E_loc, C_loc, d)
+
+        gu = jnp.einsum("ecd,edf->ecf", buf, we_i)
+        gate, up = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+        out_e = jnp.einsum("ecf,efd->ecd", h, we_o).reshape(oob, d)
+
+        yt = jnp.zeros((Tl, d), xb.dtype).at[jnp.where(occupied, src, Tl)].add(
+            out_e * w_slot[:, None], mode="drop")
+
+        if shared:  # TP-sharded shared experts ride the same reduction
+            si, so = shared
+            sgu = xt @ si
+            sg, su = jnp.split(sgu, 2, axis=-1)
+            yt = yt + (jax.nn.silu(sg) * su) @ so
+        yb = yt.reshape(xb.shape)
+        if sp:  # reduce-scatter back to the SP residual layout
+            return jax.lax.psum_scatter(yb, "model", scatter_dimension=1,
+                                        tiled=True)
+        return jax.lax.psum(yb, "model")
+
+    seq_spec = "model" if sp else None
+    in_specs = [P(dp, seq_spec, None), P(None, None),
+                P("model", None, None), P("model", None, None)]
+    args = [x, p["router"], p["we_i"], p["we_o"]]
+    if has_shared:
+        in_specs += [P(None, "model"), P("model", None)]
+        args += [p["shared_i"], p["shared_o"]]
+    fn = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=P(dp, seq_spec, None), check_vma=False)
+    return fn(*args)
+
+
+def _moe_ffn_dense(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Dense-buffer fallback (no mesh): same math, global capacity."""
+    B, S, d = x.shape
+    T = B * S
+    e_pad, e_real, k = cfg.padded_experts, cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])
+    if e_pad != e_real:
+        pad_mask = jnp.arange(e_pad) >= e_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    gates, experts = jax.lax.top_k(logits, k)              # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1).astype(x.dtype)
+
+    C = int(cfg.capacity_factor * k * T / e_real) + 1
+    # rank of each (token, choice) within its expert via one-hot exclusive
+    # cumsum (the hash_partition kernel's formulation).  NOT a global argsort:
+    # rank order within an expert is irrelevant, and a sharded global sort
+    # costs O(T·k) all-to-all rounds in SPMD (measured: ~45 GiB/layer of sort
+    # collectives on the 16×16 mesh).  The cumsum is a hierarchical two-level
+    # count (block-local one-hot sums + tiny cross-block cumsum) so it lowers
+    # to linear-work reductions, not XLA's O(n·window) reduce-window cumsum.
+    flat_e = experts.reshape(-1)                            # (T*k,)
+    onehot = (flat_e[:, None] == jnp.arange(e_pad, dtype=flat_e.dtype)[None, :]
+              ).astype(jnp.int32)                           # (T*k, E)
+    rank = _hierarchical_rank(onehot, flat_e)
+
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, e_pad * C)    # OOB drops
+    # dispatch: (E*C, d) buffer — EP-sharded on the expert axis; the scatter
+    # from DP-sharded tokens is the real MoE all-to-all
+    token_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    buf = jnp.zeros((e_pad * C, d), x.dtype).at[slot].set(xt[token_idx], mode="drop")
+    buf = hints.constrain(buf.reshape(e_pad, C, d), "model", None, None)
+
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["we_i"])          # (E, C, 2F)
+    gate, up = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["we_o"])         # (E, C, d)
+    out_e = hints.constrain(out_e, "model", None, None)
+
+    # combine: weighted scatter back to (DP-sharded) tokens
+    gathered = out_e.reshape(e_pad * C, d)[jnp.clip(slot, 0, e_pad * C - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gates.reshape(-1)[:, None]
+    yt = jnp.zeros((T, d), x.dtype).at[token_idx].add(gathered * w)
+    yt = hints.constrain(yt, hints.dp_axes(), None)
+
+    if "shared_i" in p:
+        gu = xt @ p["shared_i"]
+        gate, up = jnp.split(gu, 2, axis=-1)
+        yt = yt + (jax.nn.silu(gate) * up) @ p["shared_o"]
+    return yt.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# aux-loss (load balance) for MoE training
+# ---------------------------------------------------------------------------
+def moe_load_balance_loss(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    if cfg.padded_experts != cfg.n_experts:
+        logits = jnp.where(jnp.arange(cfg.padded_experts) >= cfg.n_experts, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top = jax.lax.top_k(logits, cfg.top_k)
+    onehot = jax.nn.one_hot(top, cfg.padded_experts, dtype=jnp.float32).sum(1)
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,374 @@
+"""Decoder-only LM covering the dense / MoE / hybrid / ssm / vlm families.
+
+Layers are grouped into the config's repeating *pattern period* and scanned
+with ``lax.scan`` over stacked period parameters — compile time at 48 layers ×
+512 devices stays bounded by one period's HLO, and remat is applied per
+period.  Non-uniform prefixes (deepseek's dense first layer) and pattern
+tails (recurrentgemma's 26 = 8×3 + 2) are unscanned explicit layers.
+
+Serving: ``init_cache`` builds the per-kind cache pytree (full KV, ring-buffer
+KV for sliding-window layers, recurrent states for RG-LRU/xLSTM);
+``forward(..., cache=..., cache_pos=...)`` is the decode step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import hints
+from repro.models import layers as L
+from repro.models import recurrent as R
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype, ffn_type: str) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in ("attn", "swa"):
+        p["mixer"] = L.attn_params(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = R.rglru_params(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = R.mlstm_params(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = R.slstm_params(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if ffn_type == "dense":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = L.ffn_params(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif ffn_type == "dense_first":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = L.ffn_params(ks[1], cfg.d_model, cfg.dense_d_ff or cfg.d_ff, dtype)
+    elif ffn_type == "moe":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = L.moe_params(ks[1], cfg, dtype)
+    elif ffn_type == "none":
+        pass
+    return p
+
+
+def _layer_plan(cfg: ModelConfig):
+    """(head_kinds, pattern, n_periods, tail_kinds) with ffn types."""
+    def ffn_type(layer_idx: int) -> str:
+        if cfg.d_ff == 0:
+            return "none"
+        if cfg.n_experts:
+            return "dense_first" if layer_idx < cfg.first_dense_layers else "moe"
+        return "dense"
+
+    head = [(cfg.pattern[i % len(cfg.pattern)], ffn_type(i))
+            for i in range(cfg.first_dense_layers)]
+    eff = cfg.n_layers - cfg.first_dense_layers
+    npd = eff // len(cfg.pattern)
+    tail_n = eff % len(cfg.pattern)
+    pattern = [(k, ffn_type(cfg.first_dense_layers)) for k in cfg.pattern]
+    tail = [(cfg.pattern[i], ffn_type(cfg.n_layers - tail_n + i))
+            for i in range(tail_n)]
+    return head, pattern, npd, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = _dtype(cfg)
+    head, pattern, npd, tail = _layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": L.dense_init(keys[0], (cfg.padded_vocab, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(keys[1], (cfg.d_model, cfg.padded_vocab), dtype)
+    if cfg.frontend == "vision_patches":
+        p["img_proj"] = L.dense_init(keys[2], (cfg.frontend_dim, cfg.d_model), dtype)
+
+    hkeys = jax.random.split(keys[3], max(len(head), 1))
+    p["head_layers"] = tuple(
+        _init_layer(hkeys[i], k, cfg, dtype, ft) for i, (k, ft) in enumerate(head)
+    )
+
+    if npd:
+        pkeys = jax.random.split(keys[4], npd)
+
+        def one_period(k):
+            sk = jax.random.split(k, len(pattern))
+            return {
+                f"slot{i}": _init_layer(sk[i], kind, cfg, dtype, ft)
+                for i, (kind, ft) in enumerate(pattern)
+            }
+
+        periods = [one_period(k) for k in pkeys]
+        p["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+    else:
+        p["periods"] = {}
+
+    tkeys = jax.random.split(keys[5], max(len(tail), 1))
+    p["tail_layers"] = tuple(
+        _init_layer(tkeys[i], k, cfg, dtype, ft) for i, (k, ft) in enumerate(tail)
+    )
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """Shape/dtype-only params (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+def _init_layer_cache(kind: str, cfg: ModelConfig, batch: int, kv_len: int, dtype):
+    hd = cfg.head_dim_
+    if kind == "attn":
+        shape = (batch, kv_len, cfg.n_kv_heads, hd)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind == "swa":
+        w = min(cfg.window, kv_len) if cfg.window else kv_len
+        shape = (batch, w, cfg.n_kv_heads, hd)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind == "rglru":
+        return R.rglru_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return R.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return R.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int) -> Params:
+    dtype = _dtype(cfg)
+    head, pattern, npd, tail = _layer_plan(cfg)
+
+    def layer_cache(kind):
+        return _init_layer_cache(kind, cfg, batch, kv_len, dtype)
+
+    cache: Params = {
+        "head_layers": tuple(layer_cache(k) for k, _ in head),
+        "tail_layers": tuple(layer_cache(k) for k, _ in tail),
+    }
+    if npd:
+        one = {f"slot{i}": layer_cache(kind) for i, (kind, _) in enumerate(pattern)}
+        cache["periods"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (npd,) + x.shape), one
+        )
+    else:
+        cache["periods"] = {}
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, kv_len: int) -> Params:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, kv_len))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _layer_apply(lp: Params, x, kind: str, ffn_type: str, cfg: ModelConfig,
+                 positions, cache=None, cache_pos=None):
+    # Megatron-SP layout hint: the residual stream between blocks is sequence-
+    # sharded over the model axis (the partitioner then materializes
+    # all-gather/reduce-scatter pairs around the TP matmuls instead of full
+    # f32 activation all-reduces, and norm/residual work shards 16-way).
+    # Applied only when S divides the axis (train/prefill, not decode).
+    if cache is None:
+        x = hints.constrain(x, hints.dp_axes(), "model", None)
+    mixer_in = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "swa"):
+        out, new_cache = L.attention(
+            lp["mixer"], mixer_in, cfg, kind=kind, positions=positions,
+            cache=cache, cache_pos=cache_pos,
+        )
+    elif kind == "rglru":
+        out, new_cache = R.rglru(lp["mixer"], mixer_in, cfg, state=cache)
+    elif kind == "mlstm":
+        out, new_cache = R.mlstm(lp["mixer"], mixer_in, cfg, state=cache)
+    elif kind == "slstm":
+        out, new_cache = R.slstm(lp["mixer"], mixer_in, cfg, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if ffn_type != "none":
+        h = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if ffn_type == "moe":
+            x = x + L.moe_ffn(lp["ffn"], h, cfg)
+        else:
+            x = x + L.ffn(lp["ffn"], h)
+    return x, new_cache
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                    # (B, S) int32
+    *,
+    image_embeds: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,  # scalar int32 (decode)
+    return_cache: bool = False,
+    logits_slice: Optional[int] = None,   # only last N positions' logits
+):
+    """Returns (logits, new_cache_or_None).
+
+    Train/prefill: cache=None; positions are [0, S).
+    Decode: cache + cache_pos; positions are cache_pos + [0, S).
+    """
+    head, pattern, npd, tail = _layer_plan(cfg)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.frontend == "vision_patches" and image_embeds is not None:
+        img = image_embeds.astype(x.dtype) @ params["img_proj"]
+        n_img = img.shape[1]
+        img_pad = jnp.zeros((B, S - n_img, x.shape[-1]), x.dtype)
+        is_img = (jnp.arange(S) < n_img)[None, :, None]
+        x = jnp.where(is_img, jnp.concatenate([img, img_pad], axis=1), x)
+
+    if cache_pos is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    else:
+        positions = cache_pos + jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    new_cache: Params = {"head_layers": [], "tail_layers": [], "periods": {}}
+
+    def run_explicit(x, layer_list, kinds, caches):
+        new = []
+        for i, (kind, ft) in enumerate(kinds):
+            c = caches[i] if caches is not None else None
+            x, nc = _layer_apply(layer_list[i], x, kind, ft, cfg, positions,
+                                 cache=c, cache_pos=cache_pos)
+            new.append(nc)
+        return x, tuple(new)
+
+    x, nh = run_explicit(x, params["head_layers"], head,
+                         cache["head_layers"] if cache else None)
+    new_cache["head_layers"] = nh
+
+    if npd:
+        def period_body(xc, per):
+            per_params, per_cache = per
+            ncs = {}
+            xx = xc
+            for i, (kind, ft) in enumerate(pattern):
+                c = per_cache[f"slot{i}"] if per_cache is not None else None
+
+                def one_layer(lp_, xx_, c_, *, _kind=kind, _ft=ft):
+                    return _layer_apply(lp_, xx_, _kind, _ft, cfg, positions,
+                                        cache=c_, cache_pos=cache_pos)
+
+                # remat per LAYER, not per period: peak activation memory is
+                # one layer's intermediates even when the pattern period is
+                # long (gemma3: 6 layers/period -> ~6x less live remat state)
+                if cfg.remat:
+                    one_layer = jax.checkpoint(one_layer)
+                xx, nc = one_layer(per_params[f"slot{i}"], xx, c)
+                ncs[f"slot{i}"] = nc
+            return xx, ncs
+
+        body = period_body
+        per_cache = cache["periods"] if cache else None
+        if per_cache is None:
+            # scan without cache: xs = stacked params only
+            x, _ = jax.lax.scan(
+                lambda xc, pp: (body(xc, (pp, None))[0], 0.0),
+                x, params["periods"])
+            new_cache["periods"] = {}
+        else:
+            # KV caches ride the scan CARRY with in-place dynamic updates —
+            # the xs->ys formulation double-buffers the whole cache (measured
+            # +cache-size temp on 32k decode); carry updates alias in place.
+            def cache_body(carry, xs):
+                xx, cache_all = carry
+                pp, i = xs
+                pc = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                           keepdims=False),
+                    cache_all)
+                xx, ncs = body(xx, (pp, pc))
+                cache_all = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), i, 0),
+                    cache_all, ncs)
+                return (xx, cache_all), None
+
+            (x, ncs), _ = jax.lax.scan(
+                cache_body, (x, per_cache),
+                (params["periods"], jnp.arange(npd, dtype=jnp.int32)))
+            new_cache["periods"] = ncs
+
+    x, nt = run_explicit(x, params["tail_layers"], tail,
+                         cache["tail_layers"] if cache else None)
+    new_cache["tail_layers"] = nt
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:, :]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = x @ params["lm_head"]
+    # logits MUST stay vocab-sharded: under SP the partitioner otherwise picks
+    # a seq-sharded full-vocab layout (measured 4 GiB/device f32 logits on
+    # gemma3's 262k vocab); CE reduces over the sharded vocab axis instead.
+    logits = hints.constrain(logits, hints.dp_axes(), None, "model")
+    return logits, (new_cache if (return_cache or cache is not None) else None)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Masked CE over (possibly padded, vocab-sharded) logits.
+
+    Sharding-friendly formulation: the gold logit is an iota-compare masked
+    reduction (elementwise over the sharded vocab axis + all-reduce), NOT a
+    take_along_axis — a gather over a sharded axis makes the partitioner
+    all-gather the whole logits tensor.  The f32 upcast + pad masking fuse
+    into both reductions (no materialized f32 copy).
+    """
+    V = logits.shape[-1]
+    vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    x = logits.astype(jnp.float32)
+    if V != vocab_size:
+        x = jnp.where(vidx < vocab_size, x, -1e30)
+    lse = jax.nn.logsumexp(x, axis=-1)
+    gold = jnp.sum(jnp.where(vidx == labels[..., None], x, 0.0), axis=-1)
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens = batch["tokens"]
+    image_embeds = batch.get("image_embeds")
+    logits, _ = forward(params, cfg, tokens, image_embeds=image_embeds)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((tokens.shape[0], 1), tokens.dtype)], axis=1)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(tokens, jnp.float32)
+    mask = mask.astype(jnp.float32).at[:, -1].set(0.0)
+    if cfg.frontend == "vision_patches":
+        is_img = jnp.arange(tokens.shape[1]) < cfg.n_frontend_tokens
+        mask = mask * (~is_img)[None, :].astype(jnp.float32)
+    loss = cross_entropy(logits, labels, mask, cfg.vocab_size)
+    if cfg.n_experts:
+        # load-balance aux loss on the first MoE layer's router (cheap proxy;
+        # per-layer routers inside the scan would need a scan-carried sum)
+        lp = (params["periods"] or {})
+        if lp:
+            first = jax.tree.map(lambda v: v[0], lp["slot0"])
+            if "router" in first.get("ffn", {}):
+                h = params["embed"][tokens]
+                loss = loss + 0.01 * L.moe_load_balance_loss(first["ffn"], h, cfg)
+    return loss

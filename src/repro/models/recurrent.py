@@ -1,0 +1,275 @@
+"""Recurrent mixers: RG-LRU (Griffin / recurrentgemma) and xLSTM blocks.
+
+RG-LRU is a gated *linear* recurrence -> ``associative_scan`` for training
+(O(log S) depth) and an O(1) cell update for decode.
+
+mLSTM (matrix memory) trains in its stabilized parallel (attention-like) form
+and decodes with an O(1) (C, n, m) state update.  sLSTM has a genuinely
+nonlinear recurrence (hidden-to-gate feedback), so training uses ``lax.scan``
+— the one sequential layer family, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent residual block body)
+# ---------------------------------------------------------------------------
+def rglru_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, r = cfg.d_model, cfg.d_rnn_
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, r), dtype),
+        "wgate": dense_init(ks[1], (d, r), dtype),
+        "conv": dense_init(ks[2], (cfg.conv_width, r), dtype, scale=0.1),
+        "wi": dense_init(ks[3], (r, r), dtype),
+        "wr": dense_init(ks[4], (r, r), dtype),
+        # Λ init so a^c ≈ 0.9..0.999 (Griffin appendix)
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.linspace(0.9, 4.0, r))), jnp.float32
+        ),
+        "wo_r": dense_init(ks[5], (r, d), dtype),
+    }
+
+
+def _causal_conv1d(u: jax.Array, w: jax.Array,
+                   state: Optional[jax.Array] = None):
+    """Depthwise causal conv; u: (B, S, R), w: (cw, R).
+
+    With ``state`` (B, cw-1, R) — decode: returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+        ext = jnp.concatenate([pad, u], axis=1)
+    else:
+        ext = jnp.concatenate([state, u], axis=1)
+    y = sum(ext[:, i : i + u.shape[1], :] * w[i] for i in range(cw))
+    new_state = ext[:, -(cw - 1):, :] if cw > 1 else None
+    return y, new_state
+
+
+def rglru(p: Params, x: jax.Array, cfg: ModelConfig,
+          state: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """RG-LRU mixer.  x: (B, S, d).  state = (h (B,R), conv (B,cw-1,R)).
+
+    Returns (out (B,S,d), new_state).
+    """
+    B, S, _ = x.shape
+    u = x @ p["wx"]
+    conv_state = state[1] if state is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(uf @ p["wr"].astype(jnp.float32))
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lam"]) * r_gate   # (B,S,R) < 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_gate * uf)
+
+    if state is None:
+        # h_t = a_t h_{t-1} + b_t  — associative linear recurrence
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, gated_x), axis=1)
+        new_h = h[:, -1, :]
+    else:
+        h_prev = state[0].astype(jnp.float32)
+        # S small (decode step): unrolled scan
+        hs = []
+        h_t = h_prev
+        for t in range(S):
+            h_t = a[:, t] * h_t + gated_x[:, t]
+            hs.append(h_t)
+        h = jnp.stack(hs, axis=1)
+        new_h = h_t
+
+    gate = jax.nn.gelu((x @ p["wgate"]).astype(jnp.float32))
+    out = (h * gate).astype(x.dtype) @ p["wo_r"]
+    return out, (new_h.astype(x.dtype), new_conv)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    r = cfg.d_rnn_
+    return (
+        jnp.zeros((batch, r), dtype),
+        jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+def mlstm_params(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wi": dense_init(ks[3], (d, h), jnp.float32),
+        "wf": dense_init(ks[4], (d, h), jnp.float32),
+        "wog": dense_init(ks[5], (d, d), dtype),
+        "wo_m": dense_init(ks[6], (d, d), dtype),
+    }
+
+
+def mlstm(p: Params, x: jax.Array, cfg: ModelConfig,
+          state: Optional[Tuple] = None):
+    """mLSTM mixer; parallel form (train/prefill) or recurrent (decode).
+
+    state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd) / (hd ** 0.5)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    xf = x.astype(jnp.float32)
+    log_i = xf @ p["wi"]                                  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(xf @ p["wf"])              # (B,S,H) <= 0
+
+    if state is None:
+        # stabilized parallel form (paper eq. 19-27)
+        F = jnp.cumsum(log_f, axis=1)                     # (B,S,H)
+        # L[t,s] = log_i[s] + F[t] - F[s]  (s <= t)
+        Lq = F                                            # per-query
+        Lk = log_i - F                                    # per-key
+        Lmat = Lq[:, :, None, :] + Lk[:, None, :, :]       # (B,S_q,S_k,H)
+        tpos = jnp.arange(S)
+        causal = tpos[:, None] >= tpos[None, :]
+        Lmat = jnp.where(causal[None, :, :, None], Lmat, -jnp.inf)
+        m = jnp.max(Lmat, axis=2)                         # (B,S,H)
+        Dmat = jnp.exp(Lmat - m[:, :, None, :])           # (B,S,S,H)
+        qk = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+        Smat = qk * Dmat
+        norm = jnp.maximum(jnp.abs(Smat.sum(axis=2)), jnp.exp(-m))  # (B,S,H)
+        h = jnp.einsum("btsh,bshd->bthd", Smat / norm[:, :, None, :],
+                       v.astype(jnp.float32))
+        # decode-compatible final state
+        mT = m[:, -1]
+        decay = jnp.exp(F[:, -1][:, None, :] - F + log_i - mT[:, None, :])
+        C_end = jnp.einsum("bsh,bshd,bshe->bhde", decay, k.astype(jnp.float32),
+                           v.astype(jnp.float32))
+        n_end = jnp.einsum("bsh,bshd->bhd", decay, k.astype(jnp.float32))
+        new_state = (C_end, n_end, mT)
+    else:
+        C, n, m_prev = state
+        hs = []
+        for t in range(S):
+            m_new = jnp.maximum(log_f[:, t] + m_prev, log_i[:, t])    # (B,H)
+            fdec = jnp.exp(log_f[:, t] + m_prev - m_new)[:, :, None]
+            idec = jnp.exp(log_i[:, t] - m_new)[:, :, None]
+            kt = k[:, t].astype(jnp.float32)
+            vt = v[:, t].astype(jnp.float32)
+            C = fdec[..., None] * C + idec[..., None] * jnp.einsum(
+                "bhd,bhe->bhde", kt, vt)
+            n = fdec * n + idec * kt
+            qt = q[:, t].astype(jnp.float32)
+            num = jnp.einsum("bhde,bhd->bhe", C, qt)
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new)
+            )[:, :, None]
+            hs.append(num / den)
+            m_prev = m_new
+        h = jnp.stack(hs, axis=1)
+        new_state = (C, n, m_prev)
+
+    og = jax.nn.sigmoid(x @ p["wog"])
+    out = (og * h.reshape(B, S, d).astype(x.dtype)) @ p["wo_m"]
+    return out, new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return (
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block)
+# ---------------------------------------------------------------------------
+def slstm_params(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 9)
+    p = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"in_{g}"] = dense_init(ks[i], (d, d), jnp.float32)
+        p[f"r_{g}"] = dense_init(ks[4 + i], (H, hd, hd), jnp.float32, scale=hd ** -0.5)
+    p["wo_s"] = dense_init(ks[8], (d, d), dtype)
+    return p
+
+
+def slstm(p: Params, x: jax.Array, cfg: ModelConfig,
+          state: Optional[Tuple] = None):
+    """sLSTM mixer: sequential scan (hidden-to-gate recurrence).
+
+    state = (c, n, h, m) each (B, H, hd).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xf = x.astype(jnp.float32)
+    zi = (xf @ p["in_i"]).reshape(B, S, H, hd)
+    zf = (xf @ p["in_f"]).reshape(B, S, H, hd)
+    zz = (xf @ p["in_z"]).reshape(B, S, H, hd)
+    zo = (xf @ p["in_o"]).reshape(B, S, H, hd)
+
+    if state is None:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        state = (c0, c0, c0, jnp.full((B, H, hd), -1e30, jnp.float32))
+
+    def step(carry, t_in):
+        c, n, h, m = carry
+        xi, xfg, xz, xo = t_in
+        gi = xi + jnp.einsum("bhd,hde->bhe", h, p["r_i"])
+        gf = xfg + jnp.einsum("bhd,hde->bhe", h, p["r_f"])
+        gz = jnp.tanh(xz + jnp.einsum("bhd,hde->bhe", h, p["r_z"]))
+        go = jax.nn.sigmoid(xo + jnp.einsum("bhd,hde->bhe", h, p["r_o"]))
+        log_f = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(log_f + m, gi)
+        fdec = jnp.exp(log_f + m - m_new)
+        idec = jnp.exp(gi - m_new)
+        c_new = fdec * c + idec * gz
+        n_new = fdec * n + idec
+        h_new = go * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = (
+        zi.transpose(1, 0, 2, 3), zf.transpose(1, 0, 2, 3),
+        zz.transpose(1, 0, 2, 3), zo.transpose(1, 0, 2, 3),
+    )
+    new_state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d)
+    out = h.astype(x.dtype) @ p["wo_s"]
+    return out, new_state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return (z, z, z, jnp.full((batch, H, hd), -1e30, jnp.float32))

@@ -1,0 +1,130 @@
+"""Architecture registry: ``--arch <id>`` -> model functions + input specs.
+
+Exposes a uniform protocol consumed by the launcher, dry-run, tests and
+benchmarks:
+
+  bundle = get_bundle("gemma3-12b")
+  bundle.init(key)                    -> params (real arrays)
+  bundle.abstract_params()            -> ShapeDtypeStruct pytree
+  bundle.train_loss(params, batch)    -> scalar
+  bundle.prefill(params, batch)       -> last-token logits
+  bundle.decode(params, cache, batch) -> (logits, new_cache)
+  bundle.input_specs(shape_cell)      -> {name: ShapeDtypeStruct}  (+ cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, LONG_CONTEXT_OK, get_config, reduced_config
+from repro.configs.base import ModelConfig, ShapeCell, SHAPES
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+
+def _src_len(seq_len: int) -> int:
+    """Encoder frame count for enc-dec shapes (audio frames ~ seq/4)."""
+    return max(64, seq_len // 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+
+    # -- params ----------------------------------------------------------------
+    def init(self, key) -> Any:
+        if self.cfg.is_encdec:
+            return ED.init_params(self.cfg, key)
+        return LM.init_params(self.cfg, key)
+
+    def abstract_params(self) -> Any:
+        if self.cfg.is_encdec:
+            return ED.abstract_params(self.cfg)
+        return LM.abstract_params(self.cfg)
+
+    # -- steps -------------------------------------------------------------------
+    def train_loss(self, params, batch) -> jax.Array:
+        if self.cfg.is_encdec:
+            return ED.train_loss(params, self.cfg, batch)
+        return LM.train_loss(params, self.cfg, batch)
+
+    def prefill(self, params, batch) -> jax.Array:
+        """Full-sequence forward emitting the last position's logits."""
+        if self.cfg.is_encdec:
+            memory = ED.encode(params, self.cfg, batch["frames"])
+            logits, _ = ED.decode_forward(params, self.cfg, batch["tokens"],
+                                          memory=memory, logits_slice=1)
+            return logits
+        logits, _ = LM.forward(params, self.cfg, batch["tokens"],
+                               image_embeds=batch.get("image_embeds"),
+                               logits_slice=1)
+        return logits
+
+    def decode(self, params, cache, batch):
+        """One-token decode step against a kv_len cache."""
+        if self.cfg.is_encdec:
+            return ED.decode_forward(params, self.cfg, batch["tokens"],
+                                     cache=cache, cache_pos=batch["pos"])
+        return LM.forward(params, self.cfg, batch["tokens"], cache=cache,
+                          cache_pos=batch["pos"])
+
+    # -- caches -------------------------------------------------------------------
+    def init_cache(self, batch: int, kv_len: int):
+        if self.cfg.is_encdec:
+            return ED.init_cache(self.cfg, batch, kv_len, _src_len(kv_len))
+        return LM.init_cache(self.cfg, batch, kv_len)
+
+    def abstract_cache(self, batch: int, kv_len: int):
+        if self.cfg.is_encdec:
+            return ED.abstract_cache(self.cfg, batch, kv_len, _src_len(kv_len))
+        return LM.abstract_cache(self.cfg, batch, kv_len)
+
+    # -- input specs -------------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of the cell."""
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if cell.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if self.cfg.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, _src_len(S), self.cfg.frontend_dim), jnp.bfloat16)
+            if self.cfg.frontend == "vision_patches":
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, self.cfg.n_frontend_tokens, self.cfg.frontend_dim),
+                    jnp.bfloat16)
+            return specs
+        if cell.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if self.cfg.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, _src_len(S), self.cfg.frontend_dim), jnp.bfloat16)
+            if self.cfg.frontend == "vision_patches":
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, self.cfg.n_frontend_tokens, self.cfg.frontend_dim),
+                    jnp.bfloat16)
+            return specs
+        # decode: one new token + write position
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def supports(self, cell: ShapeCell) -> bool:
+        if cell.name == "long_500k":
+            return self.cfg.name in LONG_CONTEXT_OK
+        return True
+
+
+@functools.lru_cache(maxsize=None)
+def get_bundle(name: str, reduced: bool = False) -> ModelBundle:
+    cfg = reduced_config(name) if reduced else get_config(name)
+    return ModelBundle(cfg)
+
+
+def all_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,2 @@
+from repro.serving.serve_step import make_serve_step, make_prefill_step, greedy_sample
+from repro.serving.batching import ContinuousBatcher, Request

@@ -1,0 +1,42 @@
+"""Serving steps: prefill + decode with donated KV caches.
+
+``make_serve_step`` builds the jitted one-token decode used by the dry-run
+(``decode_*`` cells lower THIS, not train_step) and by the continuous-batching
+scheduler in ``batching.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+
+__all__ = ["make_prefill_step", "make_serve_step", "greedy_sample"]
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(bundle: ModelBundle) -> Callable:
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(bundle: ModelBundle, sample: bool = False) -> Callable:
+    """decode step: (params, cache, batch{tokens,pos}) -> (out, new_cache).
+
+    The cache argument is donated by the launcher's jit so decode is
+    in-place on device — the steady-state serving memory is exactly one cache.
+    """
+    def serve_step(params, cache, batch):
+        logits, new_cache = bundle.decode(params, cache, batch)
+        out = greedy_sample(logits) if sample else logits
+        return out, new_cache
+
+    return serve_step

@@ -1,0 +1,6 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.train.train_step import make_train_step, init_train_state, abstract_train_state
+from repro.train.checkpointing import (
+    save_checkpoint, restore_checkpoint, AsyncCheckpointer, latest_step,
+)
+from repro.train import grad_compression

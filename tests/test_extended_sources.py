@@ -1,0 +1,141 @@
+"""Extended sub-databases + extractors + transformers (paper suppl. Tables
+2-4: SSR, HAD, IR_IMB; biology/practitioner/CSARR/takeover/ALD extractors;
+prescription/interaction/outcome transformers; >25 statistics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Category, Cohort, DCIR_SCHEMA, HAD_SCHEMA, IR_IMB_SCHEMA, SSR_SCHEMA,
+    biology_acts, bladder_cancer, csarr_acts, diagnoses, drug_dispenses,
+    drug_interactions, drug_prescriptions, flatten_star, heart_failure,
+    infarctus, long_term_diseases, medical_acts_dcir, practitioner_encounters,
+    ssr_stays, stats, takeover_reasons,
+)
+from repro.core.columnar import ColumnarTable, NULL_INT
+from repro.data.synthetic import (
+    SyntheticConfig, generate_dcir, generate_had, generate_ir_imb,
+    generate_pmsi, generate_ssr,
+)
+
+CFG = SyntheticConfig(n_patients=300, seed=21)
+
+
+@pytest.fixture(scope="module")
+def flats():
+    dcir = generate_dcir(CFG)
+    ssr = generate_ssr(CFG)
+    had = generate_had(CFG)
+    imb = generate_ir_imb(CFG)
+    return {
+        "dcir_tables": dcir,
+        "DCIR": flatten_star(DCIR_SCHEMA, dcir)[0],
+        "SSR": flatten_star(SSR_SCHEMA, ssr)[0],
+        "HAD": flatten_star(HAD_SCHEMA, had)[0],
+        "IR_IMB": flatten_star(IR_IMB_SCHEMA, imb)[0],
+        "ssr_tables": ssr,
+        "had_tables": had,
+    }
+
+
+def test_ssr_flatten_blowup(flats):
+    assert int(flats["SSR"].count) >= int(flats["ssr_tables"]["SSR_B"].count)
+
+
+def test_csarr_and_ssr_stays(flats):
+    acts = csarr_acts()(flats["SSR"])
+    assert int(acts.count) > 0
+    a = acts.to_numpy()
+    assert (a["category"] == Category.MEDICAL_ACT).all()
+    stays = ssr_stays()(flats["SSR"])
+    assert int(stays.count) == int(flats["ssr_tables"]["SSR_B"].count)
+    s = stays.to_numpy()
+    assert (s["end"] >= s["start"]).all()
+
+
+def test_takeover_reasons(flats):
+    main = takeover_reasons(main=True)(flats["HAD"])
+    assoc = takeover_reasons(main=False)(flats["HAD"])
+    assert int(main.count) == int(flats["had_tables"]["HAD_B"].count)
+    assert int(assoc.count) < int(main.count)  # ~50% null associated
+
+
+def test_long_term_diseases(flats):
+    ald = long_term_diseases()(flats["IR_IMB"])
+    assert int(ald.count) > 0
+    a = ald.to_numpy()
+    assert (a["end"] > a["start"]).all()  # longitudinal
+
+
+def test_biology_and_practitioner(flats):
+    bio = biology_acts()(flats["DCIR"])
+    med = practitioner_encounters(medical=True)(flats["DCIR"])
+    non = practitioner_encounters(medical=False)(flats["DCIR"])
+    b, m, n = bio.to_numpy(), med.to_numpy(), non.to_numpy()
+    assert (b["value"] >= 1080).all()
+    assert ((m["value"] >= 1000) & (m["value"] < 1040)).all()
+    assert ((n["value"] >= 1040) & (n["value"] < 1080)).all()
+    # bands partition the prestation space: no double counting
+    total = int(bio.count) + int(med.count) + int(non.count)
+    assert total == int(flats["dcir_tables"]["ER_PRS"].count)
+
+
+def test_drug_prescriptions(flats):
+    drugs = drug_dispenses()(flats["DCIR"])
+    rx = drug_prescriptions(drugs, CFG.n_patients, refill_days=30)
+    r = rx.to_numpy()
+    assert (r["end"] >= r["start"]).all()
+    assert int(rx.count) <= int(drugs.count)
+
+
+def test_drug_interactions_window():
+    from repro.core import make_events
+
+    ev = make_events(
+        patient_id=jnp.asarray([0, 0, 0, 1], jnp.int32),
+        category=Category.DRUG_DISPENSE,
+        value=jnp.asarray([5, 7, 7, 5], jnp.int32),
+        start=jnp.asarray([0, 10, 200, 0], jnp.int32),
+    )
+    out = drug_interactions(ev, 2, window_days=30)
+    o = out.to_numpy()
+    # only (5,7) at day 10 interacts; day 200 is outside the window,
+    # patient 1 has a single drug
+    assert len(o["patient_id"]) == 1 and o["patient_id"][0] == 0
+    assert o["group_id"][0] == 5
+
+
+def test_outcome_transformers(flats):
+    pmsi = generate_pmsi(CFG)
+    from repro.core import PMSI_MCO_SCHEMA
+
+    flat_pmsi = flatten_star(PMSI_MCO_SCHEMA, pmsi)[0]
+    diag = diagnoses()(flat_pmsi)
+    acts = medical_acts_dcir()(flats["DCIR"])
+    bc = bladder_cancer(acts, diag, act_codes=(1, 2), diag_codes=(3, 4))
+    mi = infarctus(diag, diag_codes=(10, 11, 12))
+    hf = heart_failure(diag, diag_codes=(20, 21))
+    for out in (bc, mi, hf):
+        o = out.to_numpy()
+        assert (o["category"] == Category.OUTCOME_FRACTURE).all() or len(o["category"]) == 0
+
+
+def test_statistics_battery(flats):
+    """paper §3.5: 'more than 25 Patient-centric or Event-centric statistics'."""
+    assert len(stats.STATISTICS) >= 25
+    drugs = drug_dispenses()(flats["DCIR"])
+    cohort = Cohort.from_events("drugs", drugs, CFG.n_patients)
+    cohort.window = (14_600, 14_600 + 3 * 365)
+    pats = flats["dcir_tables"]["IR_BEN"]
+    out = stats.compute(cohort, pats)
+    assert len(out) >= 25
+    assert out["subject_count"]["subjects"] == cohort.subject_count()
+    assert out["events_total"]["events"] == int(drugs.count)
+
+
+def test_pipeline_config():
+    from repro.configs.scalpel3 import FULL_SNDS, PAPER_STUDY
+
+    assert len(FULL_SNDS.flatten) == 5  # all Table-2 sub-databases
+    assert "long_term_diseases" in FULL_SNDS.extractors
+    assert PAPER_STUDY.exposure_purview_days == 60

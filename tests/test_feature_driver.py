@@ -1,0 +1,75 @@
+"""FeatureDriver tests: dense scatter tensors + LM token streams."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Category, Cohort, FeatureDriver, TokenizerSpec, make_events
+from repro.core.feature_driver import BOS, EOS, PAD
+
+
+def make_cohort(n_patients=8):
+    ev = make_events(
+        patient_id=jnp.asarray([0, 0, 1, 3, 3, 3], jnp.int32),
+        category=Category.DRUG_DISPENSE,
+        value=jnp.asarray([5, 7, 5, 1, 2, 3], jnp.int32),
+        start=jnp.asarray([10, 40, 20, 5, 6, 7], jnp.int32),
+    )
+    return Cohort.from_events("drugs", ev, n_patients)
+
+
+def test_dense_features_counts():
+    c = make_cohort()
+    c.window = (0, 100)
+    fd = FeatureDriver(c)
+    X = fd.dense_features(n_buckets=10, bucket_days=10, n_features=16)
+    assert X.shape == (8, 10, 16)
+    assert float(X.sum()) == 6.0  # every event lands once
+    assert float(X[0, 1, 5]) == 1.0  # patient 0, day 10, drug 5
+    assert float(X[3].sum()) == 3.0
+
+
+def test_dense_features_window_check():
+    c = make_cohort()
+    c.window = (0, 30)  # events at 40 fall outside
+    fd = FeatureDriver(c)
+    X = fd.dense_features(n_buckets=3, bucket_days=10, n_features=16)
+    assert fd.checks["events_out_of_window"] == 1
+    assert float(X.sum()) == 5.0
+
+
+def test_token_sequences_structure():
+    c = make_cohort()
+    c.window = (0, 100)
+    fd = FeatureDriver(c)
+    toks, mask = fd.token_sequences(seq_len=16)
+    t = np.asarray(toks)
+    assert (t[:, 0] == BOS).all()
+    # patient 3 has 3 events -> BOS e e e EOS PAD...
+    assert t[3, 4] == EOS
+    assert (t[3, 5:] == PAD).all()
+    assert np.asarray(mask)[3].sum() == 5
+    # patient with no events: BOS EOS
+    assert t[2, 1] == EOS
+    spec = TokenizerSpec.default()
+    off = spec.category_offsets[Category.DRUG_DISPENSE]
+    assert t[0, 1] == off + 5 and t[0, 2] == off + 7  # time-ordered
+
+
+def test_token_sequences_truncation_counted():
+    c = make_cohort()
+    c.window = (0, 100)
+    fd = FeatureDriver(c)
+    toks, _ = fd.token_sequences(seq_len=4)  # room for only 2 events
+    assert fd.checks["events_truncated"] > 0
+
+
+def test_tokenizer_vocab_layout():
+    spec = TokenizerSpec.default()
+    offs = sorted(spec.category_offsets.values())
+    assert offs[0] >= 8  # specials reserved
+    # non-overlapping category ranges
+    for (c1, o1) in spec.category_offsets.items():
+        for (c2, o2) in spec.category_offsets.items():
+            if c1 < c2:
+                assert (o1 + spec.category_sizes[c1] <= o2) or \
+                       (o2 + spec.category_sizes[c2] <= o1)
