@@ -65,6 +65,13 @@ def bench_flattening() -> None:
         )
 
 
+def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
+    from benchmarks import study_plan_bench
+
+    for r in study_plan_bench.run(n_patients=n_patients, repeats=repeats):
+        _emit(f"study_plan.{r['name']}", r["seconds"] * 1e6, r["derived"])
+
+
 def bench_roofline() -> None:
     from benchmarks import roofline
 
@@ -86,10 +93,22 @@ def bench_roofline() -> None:
 
 
 def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small synthetic dataset, plan-executor coverage "
+                    "only — the CI regression gate")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.smoke:
+        bench_table1()
+        bench_study(n_patients=500, repeats=2)
+        return
     bench_table1()
     bench_flattening()
     bench_fig3()
+    bench_study()
     bench_roofline()
 
 

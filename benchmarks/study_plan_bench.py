@@ -1,0 +1,123 @@
+"""Fused study-plan execution vs the eager per-extractor path.
+
+The claim behind ``repro.study`` (ISSUE 1 tentpole): N extractors over one
+flat table cost N projection→mask→compaction passes when run eagerly, but one
+shared scan + fused masks + one XLA program when run as a Plan.  This bench
+measures both on the synthetic DCIR table, with jit/compile warmed for BOTH
+paths so the delta is execution, not tracing.
+
+Run:  PYTHONPATH=src python benchmarks/study_plan_bench.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+
+def _extractors():
+    from repro.core import (
+        biology_acts, drug_dispenses, medical_acts_dcir, practitioner_encounters,
+    )
+
+    return [
+        ("drugs", drug_dispenses()),
+        ("drugs_atc", drug_dispenses(granularity="atc")),
+        ("acts", medical_acts_dcir()),
+        ("bio", biology_acts()),
+        ("enc_med", practitioner_encounters(medical=True)),
+        ("enc_other", practitioner_encounters(medical=False)),
+    ]
+
+
+def _block(outs) -> None:
+    jax.block_until_ready([t.count for t in outs])
+
+
+def run(n_patients: int = 2_000, repeats: int = 10, engine: str = "xla") -> List[Dict]:
+    from repro.core import DCIR_SCHEMA, flatten_star
+    from repro.data.synthetic import SyntheticConfig, generate_dcir
+    from repro.study import Study
+
+    cfg = SyntheticConfig(n_patients=n_patients, seed=7)
+    dcir = generate_dcir(cfg)
+    flat, _ = flatten_star(DCIR_SCHEMA, dcir)
+    exts = _extractors()
+
+    def eager_once():
+        return [ex(flat, engine=engine) for _, ex in exts]
+
+    def build_study() -> Study:
+        s = Study(n_patients=n_patients)
+        for name, ex in exts:
+            s.extract(ex, name=name)
+        return s
+
+    study = build_study()
+    tables = {"DCIR": flat}
+
+    # warm both paths (jit compile excluded from timing)
+    _block(eager_once())
+    res = study.run(tables, engine=engine)
+    _block(list(res.events.values()))
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        _block(eager_once())
+    eager_s = (time.perf_counter() - t0) / repeats
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        r = study.run(tables, engine=engine)
+        _block(list(r.events.values()))
+    fused_s = (time.perf_counter() - t0) / repeats
+
+    opt = study.optimized_plan()
+    ops = opt.count_ops()
+    eager_ops: Dict[str, int] = {}
+    for _, ex in exts:
+        from repro.study.plan import PlanBuilder
+
+        b = PlanBuilder()
+        ex.contribute(b)
+        for n in b.build().nodes:
+            eager_ops[n.op] = eager_ops.get(n.op, 0) + 1
+
+    rows = [
+        {
+            "name": f"eager_{len(exts)}x",
+            "seconds": eager_s,
+            "derived": f"scans={eager_ops.get('scan', 0)} "
+                       f"mask_nodes={eager_ops.get('drop_nulls', 0) + eager_ops.get('value_filter', 0)}",
+        },
+        {
+            "name": f"fused_plan_{len(exts)}x",
+            "seconds": fused_s,
+            "derived": f"scans={ops.get('scan', 0)} mask_nodes={ops.get('fused_mask', 0)} "
+                       f"compactions={ops.get('compact', 0)} "
+                       f"speedup={eager_s / fused_s:.2f}x",
+        },
+    ]
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-patients", type=int, default=2_000)
+    ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--engine", default="xla", choices=("xla", "pallas"))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(args.n_patients, args.repeats, args.engine):
+        print(f"study_plan.{r['name']},{r['seconds'] * 1e6:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

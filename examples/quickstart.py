@@ -1,7 +1,11 @@
 """Quickstart: the SCALPEL3 pipeline in ~40 lines (paper Supplementary A).
 
-  synthetic SNDS -> flatten (denormalize once) -> extract concepts ->
-  cohort algebra -> stats report.
+  synthetic SNDS -> flatten (denormalize once) -> lazy Study plan
+  (extraction + cohort algebra fused into ONE compiled pass) -> stats report.
+
+The ``Study`` builder defers everything: extractors share a single scan over
+the flat table, mask steps fuse, each output materializes exactly once, and
+every executed plan node lands in the ``OperationLog`` automatically.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,11 +14,9 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (
-    Cohort, CohortFlow, DCIR_SCHEMA, OperationLog, drug_dispenses,
-    flatten_star, medical_acts_dcir, patients, stats,
-)
+from repro.core import DCIR_SCHEMA, drug_dispenses, flatten_star, medical_acts_dcir, stats
 from repro.data.synthetic import SyntheticConfig, generate_dcir
+from repro.study import Study, flow_rows_from_log
 
 # 1. normalized claims data (stand-in for the CSV exports CNAM dumps)
 cfg = SyntheticConfig(n_patients=1_000, seed=0)
@@ -27,23 +29,28 @@ for stage in audit:
     stage.assert_no_loss()
 print(f"flat table: {int(flat.count)} rows x {len(flat.column_names)} cols")
 
-# 3. SCALPEL-Extraction: ready-to-use concepts + provenance
-log = OperationLog()
-pats = patients(dcir["IR_BEN"], log)
-drugs = drug_dispenses()(flat, log)
-acts = medical_acts_dcir(codes=list(range(30)))(flat, log)  # a rare-acts subset
-print(log.render_flowchart())
+# 3+4. SCALPEL-Extraction + Analysis as ONE lazy study plan
+study = (Study(n_patients=cfg.n_patients)
+         .extract(drug_dispenses(), name="drug_purchases")
+         .extract(medical_acts_dcir(codes=list(range(30))), name="acts")
+         .patients("IR_BEN")
+         .cohort("base", "extract_patients")
+         .cohort("drugged", "drug_purchases")
+         .cohort("final", "drugged & base - acts")
+         .flow("base", "drugged", "final"))
 
-# 4. SCALPEL-Analysis: cohort algebra with auto-composed descriptions
-base = Cohort.from_patient_table("extract_patients", pats, cfg.n_patients)
-drugged = Cohort.from_events("drug_purchases", drugs, cfg.n_patients)
-treated = Cohort.from_events("acts", acts, cfg.n_patients)
-final = drugged.intersection(base).difference(treated)
+ops = study.optimized_plan().count_ops()
+print(f"\noptimized plan: {ops.get('scan', 0)} scan(s) over DCIR+IR_BEN, "
+      f"{ops.get('fused_mask', 0)} fused masks, {ops.get('compact', 0)} compactions")
+
+res = study.run({"DCIR": flat, "IR_BEN": dcir["IR_BEN"]})
+final = res.cohorts["final"]
 print(f"\nfinal cohort: {final.subject_count()} subjects")
 print(f"describe(): {final.describe()}")
-
-flow = CohortFlow([base, drugged, final])
-print("\n" + flow.render())
+print("\n" + res.flow.render())
+print("\nflowchart rebuilt from the OperationLog alone:")
+print(flow_rows_from_log(res.log))
 
 # 5. automatic statistics report
+pats = res.events["extract_patients"]
 print("\n" + stats.report(final, pats, names=["gender_distribution", "age_buckets"]))

@@ -102,7 +102,8 @@ class Cohort:
     def describe(self) -> str:
         return self.description
 
-    def _combine(self, other: "Cohort", bits: jax.Array, desc: str, name: str) -> "Cohort":
+    def _combine(self, other: "Cohort", bits: jax.Array, desc: str, name: str,
+                 window: Tuple[int, int]) -> "Cohort":
         if self.n_patients != other.n_patients:
             raise ValueError("cohorts live in different patient universes")
         ev = self.events
@@ -110,29 +111,35 @@ class Cohort:
             keep_mask = Bitset.to_mask(bits, self.n_patients)
             ev = ev.filter(keep_mask[jnp.clip(ev.columns["patient_id"], 0, self.n_patients - 1)])
         return Cohort(name=name, description=desc, subjects=bits,
-                      n_patients=self.n_patients, events=ev,
-                      window=(max(self.window[0], other.window[0]),
-                              min(self.window[1], other.window[1])))
+                      n_patients=self.n_patients, events=ev, window=window)
 
     def intersection(self, other: "Cohort") -> "Cohort":
+        # a subject must satisfy both -> coverage is the window overlap
         return self._combine(
             other, self.subjects & other.subjects,
             f"{self.description} with {other.description}",
             f"{self.name}&{other.name}",
+            (max(self.window[0], other.window[0]),
+             min(self.window[1], other.window[1])),
         )
 
     def union(self, other: "Cohort") -> "Cohort":
+        # either side suffices -> coverage spans both windows
         return self._combine(
             other, self.subjects | other.subjects,
             f"{self.description} or {other.description}",
             f"{self.name}|{other.name}",
+            (min(self.window[0], other.window[0]),
+             max(self.window[1], other.window[1])),
         )
 
     def difference(self, other: "Cohort") -> "Cohort":
+        # subjects (and events) all come from self -> keep self's coverage
         return self._combine(
             other, self.subjects & ~other.subjects,
             f"{self.description} without {other.description}",
             f"{self.name}-{other.name}",
+            self.window,
         )
 
     # granular control: underlying tables stay reachable (paper: "More

@@ -48,8 +48,6 @@ def dedupe_by(table: ColumnarTable, keys: Sequence[str]) -> ColumnarTable:
     (e.g. one hospital stay appears once per diagnosis×act pair).
     """
     t = table.sort_by(list(keys))
-    same_as_prev = t.valid
-    first = jnp.ones((t.capacity,), bool)
     neq = jnp.zeros((t.capacity,), bool)
     for k in keys:
         col = t.columns[k]
@@ -75,44 +73,52 @@ class Extractor:
     codes: Optional[Tuple[int, ...]] = None  # step-2b value whitelist
     distinct: Tuple[str, ...] = ()   # dedupe keys (for 1:N flat layouts)
 
-    def __call__(self, flat: ColumnarTable, log: Optional[OperationLog] = None,
-                 compact: bool = True, engine: str = "xla") -> ColumnarTable:
-        """engine: 'xla' (argsort compaction, default) or 'pallas' (the
-        fused filter_compact kernel — the TPU production path; on CPU it runs
-        in interpret mode, so it is opt-in)."""
-        # step 1: projection — only the columns this extractor touches.
+    def projection(self) -> Tuple[str, ...]:
+        """Step-1 column set: only the columns this extractor touches."""
         needed = ["patient_id", self.value_col, self.start_col]
         for c in (self.end_col, self.group_col, self.weight_col):
             if c:
                 needed.append(c)
         needed += [c for c in self.null_cols if c not in needed]
         needed += [c for c in self.distinct if c not in needed]
-        t = flat.select(sorted(set(needed)))
+        return tuple(sorted(set(needed)))
 
-        # step 2: null filtering (mask algebra, no materialization).
-        t = t.drop_nulls(self.null_cols or (self.value_col,))
-
-        # step 2b: late value filter on reduced data.
+    def contribute(self, b, compact: bool = True) -> int:
+        """Append this extractor's steps 1-3 to a ``PlanBuilder``; returns the
+        output node id.  Scans hash-cons, so every extractor over one source
+        shares the scan node, and the optimizer then merges projections and
+        fuses the mask steps (``repro.study.optimizer``)."""
+        t = b.select(b.scan(self.source), self.projection())
+        t = b.drop_nulls(t, self.null_cols or (self.value_col,))
         if self.codes is not None:
-            allowed = jnp.asarray(np.asarray(self.codes, np.int32))
-            t = t.filter(jnp.isin(t.columns[self.value_col], allowed))
-
+            t = b.value_filter(t, self.value_col, self.codes)
         if self.distinct:
-            t = dedupe_by(t, self.distinct)
-
-        # step 3: conform to the Event schema.
-        ev = make_events(
-            patient_id=t.columns["patient_id"],
-            category=self.category,
-            value=t.columns[self.value_col],
-            start=t.columns[self.start_col],
-            end=t.columns[self.end_col] if self.end_col else None,
-            group_id=t.columns[self.group_col] if self.group_col else None,
-            weight=t.columns[self.weight_col] if self.weight_col else None,
-            valid=t.valid,
+            t = b.dedupe(t, self.distinct)
+        t = b.conform_events(
+            t, name=self.name, category=self.category, value_col=self.value_col,
+            start_col=self.start_col, end_col=self.end_col,
+            group_col=self.group_col, weight_col=self.weight_col,
         )
         if compact:
-            ev = self._compact(ev, engine)
+            t = b.compact(t)
+        return t
+
+    def __call__(self, flat: ColumnarTable, log: Optional[OperationLog] = None,
+                 compact: bool = True, engine: str = "xla") -> ColumnarTable:
+        """Eager wrapper (backward compatible): builds the single-extractor
+        plan and executes it immediately.
+
+        engine: 'xla' (argsort compaction, default) or 'pallas' (the fused
+        filter_compact kernel — the TPU production path; on CPU it runs in
+        interpret mode, so it is opt-in).  Multi-extractor studies should use
+        ``repro.study.Study``, which shares one scan across extractors."""
+        from repro.study import executor as _executor
+        from repro.study.plan import PlanBuilder
+
+        b = PlanBuilder()
+        out = self.contribute(b, compact=compact)
+        b.set_output(self.name, out)
+        ev = _executor.execute(b.build(), {self.source: flat}, engine=engine)[out]
         if log is not None:
             log.record(
                 op=f"extract:{self.name}",
@@ -121,23 +127,6 @@ class Extractor:
                 params={"codes": None if self.codes is None else len(self.codes)},
             )
         return ev
-
-    @staticmethod
-    def _compact(ev: ColumnarTable, engine: str) -> ColumnarTable:
-        if engine == "xla":
-            return ev.compact()
-        if engine != "pallas":
-            raise ValueError(f"unknown engine {engine!r}")
-        from repro.kernels import ops as kops
-
-        cols = {}
-        count = None
-        for name, col in ev.columns.items():
-            out, cnt = kops.filter_compact(col, ev.valid)
-            cols[name] = out
-            count = cnt if count is None else count
-        valid = jnp.arange(ev.capacity) < count
-        return ColumnarTable(cols, valid, count.astype(jnp.int32))
 
 
 # --- ready-to-use extractors (paper Table 3) --------------------------------

@@ -14,7 +14,13 @@ from typing import Any, Dict, List, Optional
 __all__ = ["OperationLog", "git_hash"]
 
 
+import functools
+
+
+@functools.lru_cache(maxsize=1)
 def git_hash() -> str:
+    # memoized: OperationLog is constructed per study run and a subprocess
+    # per construction costs more than the run itself on small tables
     try:
         out = subprocess.run(
             ["git", "rev-parse", "HEAD"], capture_output=True, text=True, timeout=5

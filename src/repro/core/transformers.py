@@ -190,6 +190,8 @@ def exposures_sharded(
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.pipeline import compat_shard_map
+
     n = mesh.shape[axis_name]
     cap = -(-dispenses.capacity // n) * n
     t = dispenses.pad_to(cap) if cap != dispenses.capacity else dispenses
@@ -199,9 +201,9 @@ def exposures_sharded(
         out = exposures(local, n_patients, **kw)
         return dict(out.columns), out.valid
 
-    fn = jax.shard_map(
-        body, mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
-        out_specs=(P(axis_name), P(axis_name)), check_vma=False,
+    fn = compat_shard_map(
+        body, mesh, in_specs=(P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name), P(axis_name)),
     )
     cols, valid = fn(dict(t.columns), t.valid)
     return ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))

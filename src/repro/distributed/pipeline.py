@@ -1,4 +1,8 @@
-"""Pipeline parallelism (optional feature): GPipe schedule over a "pipe" axis.
+"""Pipeline parallelism + sharded study-plan execution.
+
+Part 1 (GPipe): schedule over a "pipe" axis for the model stack.
+Part 2 (``execute_plan_sharded``): run a ``repro.study`` Plan shard-local
+under ``shard_map`` over patient-partitioned flat tables.
 
 Each mesh stage holds one contiguous block of layers; microbatches stream
 through via ``collective_permute`` (the TPU ICI neighbor hop).  The schedule
@@ -19,7 +23,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["gpipe", "pipeline_transformer"]
+__all__ = ["gpipe", "pipeline_transformer", "compat_shard_map",
+           "execute_plan_sharded"]
+
+
+def compat_shard_map(f: Callable, mesh: Mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions (>=0.6 top-level with check_vma;
+    older releases only ship ``jax.experimental.shard_map`` with check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def gpipe(stage_fn: Callable, mesh: Mesh, n_stages: int, axis_name: str = "pipe"):
@@ -92,3 +109,94 @@ def pipeline_transformer(layer_fn: Callable, mesh: Mesh, n_stages: int,
         return y
 
     return gpipe(stage_fn, mesh, n_stages, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# sharded study-plan execution
+# ---------------------------------------------------------------------------
+_PLAN_CACHE = {}
+
+
+def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
+                         axis_name: str = "data", engine: str = "xla"):
+    """Execute a study ``Plan`` shard-local over a mesh ``data`` axis.
+
+    Requirement (same as ``transformers.exposures_sharded``): the flat tables
+    are *patient-partitioned* — ``distributed_flatten`` keys its output on
+    ``patient_id`` — so every per-patient / per-stay operation (masks, dedupe,
+    sorts, transformer folds, subject bitsets) is shard-local and needs no
+    collective.  Cross-shard stitches are scalar/bitset ``psum``s only:
+
+      * subject bitsets: each patient lives on exactly one shard, so partial
+        bitsets are disjoint and ``psum`` is the bitwise OR;
+      * node row counts: local counts sum to the global count.
+
+    Table outputs come back shard-concatenated (each shard's block compacted
+    locally, global ``count`` from the psum); they remain valid-masked tables
+    like every other plan output.  Returns ``(vals, counts)`` shaped like the
+    local executor's so ``Study.run`` shares its realization path.
+    """
+    import numpy as np
+    from repro.core.columnar import ColumnarTable
+    from repro.study.executor import run_plan_body
+    from repro.study.plan import COHORT_OPS, TABLE_OPS
+
+    n = mesh.shape[axis_name]
+    env = {}
+    for src in plan.sources():
+        t = tables[src]
+        cap = -(-t.capacity // n) * n
+        env[src] = t.pad_to(cap) if cap != t.capacity else t
+    cols_in = {s: dict(t.columns) for s, t in env.items()}
+    valid_in = {s: t.valid for s, t in env.items()}
+
+    out_ids = {i for _, i in plan.outputs}
+    table_ids = tuple(i for i in sorted(out_ids)
+                      if plan.nodes[i].op in TABLE_OPS)
+    # base cohort bitsets cross shards (psum == OR for disjoint patients);
+    # interior cohort_op bits stay local — the Study layer replays the
+    # algebra on realized operands — but named cohort outputs still export.
+    cohort_ids = tuple(i for i, nd in enumerate(plan.nodes)
+                       if nd.op == "cohort_from_events"
+                       or (nd.op in COHORT_OPS and i in out_ids))
+    # event tables feeding cohorts must be realized too (Cohort.events)
+    ev_ids = tuple(sorted(set(table_ids) | {
+        nd.inputs[0] for nd in plan.nodes if nd.op == "cohort_from_events"}))
+
+    # key on mesh *content* — an id() key could hand a new mesh allocated at
+    # a freed mesh's address a stale compiled fn bound to dead devices
+    mesh_key = (tuple(mesh.axis_names),
+                tuple(mesh.shape[a] for a in mesh.axis_names),
+                tuple(d.id for d in np.ravel(mesh.devices)))
+    key = (plan.key(), n_patients, engine, mesh_key, axis_name)
+    fn = _PLAN_CACHE.get(key)
+    if fn is None:
+        def body(cols, valids):
+            local = {s: ColumnarTable(c, valids[s],
+                                      valids[s].sum().astype(jnp.int32))
+                     for s, c in cols.items()}
+            vals, counts = run_plan_body(plan, local, n_patients, engine)
+            t_out = {i: (dict(vals[i].columns), vals[i].valid)
+                     for i in ev_ids}
+            b_out = {i: jax.lax.psum(vals[i], axis_name) for i in cohort_ids}
+            # local counts sum to global counts; stacked -> one psum+transfer
+            ids = tuple(sorted(counts))
+            c_out = jax.lax.psum(jnp.stack([counts[i] for i in ids]), axis_name)
+            return t_out, b_out, c_out
+
+        fn = jax.jit(compat_shard_map(
+            body, mesh,
+            in_specs=(P(axis_name), P(axis_name)),
+            out_specs=(P(axis_name), P(), P()),
+        ))
+        _PLAN_CACHE[key] = fn
+
+    t_out, b_out, counts_vec = fn(cols_in, valid_in)
+    from repro.study.executor import traced_ids
+
+    counts = {i: int(c) for i, c in
+              zip(traced_ids(plan), np.asarray(counts_vec))}
+    vals = {i: ColumnarTable(c, v, jnp.int32(counts[i]))
+            for i, (c, v) in t_out.items()}
+    vals.update(b_out)
+    return vals, counts

@@ -1,0 +1,20 @@
+"""repro.study — the lazy query-plan layer over SCALPEL3's three libraries.
+
+``Study`` (api) builds a ``Plan`` (plan) of scan/mask/conform/compact/cohort/
+featurize nodes; ``optimize`` (optimizer) fuses masks, shares source scans and
+defers compaction; ``execute`` (executor) jit-compiles the plan once per
+(structure, table spec, engine) and auto-records ``OperationLog`` provenance.
+"""
+from repro.study.plan import Node, Plan, PlanBuilder
+from repro.study.optimizer import (
+    optimize, merge_projections, fuse_masks, defer_compaction, dce,
+)
+from repro.study.executor import execute, TRANSFORMS, jit_cache_info, clear_jit_cache
+from repro.study.api import Study, StudyResult, flow_rows_from_log
+
+__all__ = [
+    "Node", "Plan", "PlanBuilder",
+    "optimize", "merge_projections", "fuse_masks", "defer_compaction", "dce",
+    "execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache",
+    "Study", "StudyResult", "flow_rows_from_log",
+]

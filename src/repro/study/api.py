@@ -1,0 +1,317 @@
+"""``Study``: the fluent, lazy entry point unifying extraction → cohort →
+features (the paper's three layers) behind one Plan.
+
+User code reads like the paper's supplementary notebooks::
+
+    result = (Study(n_patients=P)
+              .extract(drug_dispenses(), name="drugs")
+              .extract(medical_acts_dcir(), name="acts")
+              .patients("IR_BEN")
+              .transform("exposures", "drugs", name="exposed", purview_days=60)
+              .cohort("base", "extract_patients")
+              .cohort("final", "exposed & base - acts")
+              .flow("base", "exposed", "final")
+              .featurize("X", cohort="final", kind="dense",
+                         n_buckets=36, bucket_days=31, n_features=128)
+              .run({"DCIR": flat, "IR_BEN": ir_ben}, engine="xla"))
+
+Nothing executes until ``run()``: the builder accumulates Plan nodes, the
+optimizer fuses masks / shares scans / defers compaction, and the executor
+runs ONE jit-compiled program for all extractors, transformers and cohort
+algebra, logging every node into an ``OperationLog`` automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cohort import Cohort, CohortCollection, CohortFlow
+from repro.core.columnar import ColumnarTable
+from repro.core.metadata import OperationLog
+from repro.study import executor as _executor
+from repro.study import optimizer as _optimizer
+from repro.study.plan import COHORT_OPS, Plan, PlanBuilder, TABLE_OPS
+
+__all__ = ["Study", "StudyResult", "flow_rows_from_log"]
+
+_FLOW_OUT = "__flow__"
+
+
+@dataclasses.dataclass
+class StudyResult:
+    """Realized outputs of one ``Study.run``."""
+
+    events: Dict[str, ColumnarTable]          # named table outputs
+    cohorts: Dict[str, Cohort]                # named cohorts
+    flow: Optional[CohortFlow]                # if .flow(...) was declared
+    features: Dict[str, Any]                  # named featurize outputs
+    log: OperationLog                         # automatic provenance
+    plan: Plan                                # the plan that actually ran
+    feature_checks: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
+
+    def collection(self) -> CohortCollection:
+        return CohortCollection(dict(self.cohorts), metadata=self.log)
+
+
+class Study:
+    """Deferred study builder over the Plan IR (see module docstring)."""
+
+    def __init__(self, n_patients: int,
+                 window: Tuple[int, int] = (0, 2_000_000_000)) -> None:
+        self.n_patients = int(n_patients)
+        self._window = (int(window[0]), int(window[1]))
+        self._b = PlanBuilder()
+        self._names: Dict[str, int] = {}      # name -> node id (pre-optimize)
+        self._kinds: Dict[str, str] = {}      # name -> events|table|cohort|feature
+        self._sources: Dict[str, ColumnarTable] = {}
+        self._flow_names: Optional[List[str]] = None
+        self._feature_names: List[str] = []
+        self._opt_cache: Optional[Tuple[Plan, Plan]] = None  # (raw, optimized)
+
+    # -- builder steps -------------------------------------------------------
+    def _register(self, name: str, nid: int, kind: str) -> "Study":
+        if name in self._names:
+            raise ValueError(f"duplicate study output name {name!r}")
+        self._names[name] = self._b.set_output(name, nid)
+        self._kinds[name] = kind
+        return self
+
+    def source(self, name: str, table: ColumnarTable) -> "Study":
+        """Pre-bind a flat table (alternative to passing it at run())."""
+        self._sources[name] = table
+        return self
+
+    def extract(self, extractor, name: Optional[str] = None,
+                compact: bool = True) -> "Study":
+        """Append a declarative ``Extractor``'s steps to the plan."""
+        nid = extractor.contribute(self._b, compact=compact)
+        return self._register(name or extractor.name, nid, "events")
+
+    def patients(self, source: str = "IR_BEN",
+                 name: str = "extract_patients") -> "Study":
+        """Patient demographics table (paper task (a)) as a plan branch."""
+        b = self._b
+        t = b.select(b.scan(source),
+                     ["patient_id", "gender", "birth_date", "death_date"])
+        t = b.compact(b.dedupe(t, ["patient_id"]))
+        return self._register(name, t, "table")
+
+    def transform(self, fn: str, *inputs: str, name: Optional[str] = None,
+                  **kwargs: Any) -> "Study":
+        """Defer a registered transformer (``executor.TRANSFORMS``) over named
+        upstream outputs; ``n_patients`` is injected at execution."""
+        if fn not in _executor.TRANSFORMS:
+            raise ValueError(f"unknown transform {fn!r}; registered: "
+                             f"{sorted(_executor.TRANSFORMS)}")
+        ids = [self._node_of(x) for x in inputs]
+        nid = self._b.transform(fn, ids, name=name or fn, **kwargs)
+        return self._register(name or fn, nid, "events")
+
+    def concat(self, name: str, *inputs: str) -> "Study":
+        """Stack named event outputs into one table (schemas must match)."""
+        nid = self._b.concat([self._node_of(x) for x in inputs], name=name)
+        return self._register(name, nid, "events")
+
+    def cohort(self, name: str, expr: str,
+               description: Optional[str] = None) -> "Study":
+        """Define a cohort from a whitespace-separated algebra expression:
+        ``"exposed & base - fractured"`` (left-associative ∩ ∪ \\ over
+        previously declared cohorts / extractions / transforms)."""
+        nid = self._parse_expr(expr, name)
+        self._register(name, nid, "cohort")
+        return self
+
+    def flow(self, *names: str) -> "Study":
+        """Declare the RECORD-flowchart fold over named cohorts, in order."""
+        ids = [self._cohort_node(n) for n in names]
+        fid = self._b.flow(ids, name="flow")
+        self._flow_names = list(names)
+        self._names[_FLOW_OUT] = self._b.set_output(_FLOW_OUT, fid)
+        self._kinds[_FLOW_OUT] = "flow"
+        return self
+
+    def featurize(self, name: str, cohort: str, kind: str = "dense",
+                  patients: Optional[str] = None, **kwargs: Any) -> "Study":
+        """Defer a FeatureDriver export (``dense`` or ``tokens``) of a cohort."""
+        if kind not in ("dense", "tokens"):
+            raise ValueError(f"featurize kind must be dense|tokens, got {kind!r}")
+        cid = self._cohort_node(cohort)
+        pid = self._node_of(patients) if patients else None
+        nid = self._b.featurize(cid, name=name, kind=kind, patients=pid, **kwargs)
+        self._feature_names.append(name)
+        return self._register(name, nid, "feature")
+
+    def window(self, start: int, end: int) -> "Study":
+        self._window = (int(start), int(end))
+        return self
+
+    # -- name resolution -----------------------------------------------------
+    def _node_of(self, name: str) -> int:
+        if name not in self._names:
+            raise ValueError(f"unknown study output {name!r}; defined: "
+                             f"{sorted(self._names)}")
+        return self._names[name]
+
+    def _cohort_node(self, name: str) -> int:
+        """Node id of a cohort; event/table outputs auto-wrap via
+        ``cohort_from_events`` (membership = has-any-row, as in the paper)."""
+        nid = self._node_of(name)
+        if self._kinds[name] == "cohort":
+            return nid
+        return self._b.cohort_from_events(nid, name=name)
+
+    def _parse_expr(self, expr: str, name: str) -> int:
+        toks = expr.split()
+        if not toks or len(toks) % 2 == 0:
+            raise ValueError(f"malformed cohort expression {expr!r}")
+        acc = self._cohort_node(toks[0])
+        for k in range(1, len(toks), 2):
+            op, rhs = toks[k], toks[k + 1]
+            if op not in ("&", "|", "-"):
+                raise ValueError(f"bad operator {op!r} in {expr!r}")
+            acc = self._b.cohort_op(op, acc, self._cohort_node(rhs),
+                                    name=f"{name}[{(k + 1) // 2}]")
+        return acc
+
+    # -- plans ---------------------------------------------------------------
+    def plan(self) -> Plan:
+        """The raw (unoptimized) plan built so far."""
+        return self._b.build()
+
+    def optimized_plan(self) -> Plan:
+        raw = self.plan()
+        if self._opt_cache is not None and self._opt_cache[0] is not None \
+                and self._opt_cache[0].key() == raw.key():
+            return self._opt_cache[1]
+        opt = _optimizer.optimize(raw)
+        self._opt_cache = (raw, opt)
+        return opt
+
+    # -- execution -----------------------------------------------------------
+    def run(self, tables: Optional[Dict[str, ColumnarTable]] = None,
+            engine: str = "xla", optimize: bool = True, jit: bool = True,
+            log: Optional[OperationLog] = None, mesh=None,
+            axis_name: str = "data") -> StudyResult:
+        """Optimize, execute (optionally under ``shard_map`` on ``mesh``),
+        realize cohorts/flow/features, and auto-log provenance."""
+        env = dict(self._sources)
+        env.update(tables or {})
+        plan = self.optimized_plan() if optimize else self.plan()
+        log = log if log is not None else OperationLog()
+
+        if mesh is not None:
+            from repro.distributed.pipeline import execute_plan_sharded
+
+            vals, counts = execute_plan_sharded(
+                plan, env, self.n_patients, mesh, axis_name=axis_name,
+                engine=engine)
+            _executor.record_plan(plan, counts, log, engine)
+        else:
+            vals = _executor.execute(plan, env, n_patients=self.n_patients,
+                                     engine=engine, log=log, jit=jit)
+
+        nodes = plan.nodes
+        out_ids = plan.output_ids
+        events = {name: vals[i] for name, i in out_ids.items()
+                  if nodes[i].op in TABLE_OPS and i in vals}
+
+        # realize cohorts by replaying the algebra on wrapped operands — the
+        # thin eager layer keeps description/window/event semantics identical
+        # to the interactive Cohort API.  A node can carry several names when
+        # two cohort expressions hash-cons to the same sub-plan (aliases), so
+        # names are grouped, never inverted into an id-keyed dict.
+        names_by_id: Dict[int, List[str]] = {}
+        for name, i in out_ids.items():
+            if nodes[i].op in COHORT_OPS:
+                names_by_id.setdefault(i, []).append(name)
+        cohort_names = {i: ns[0] for i, ns in names_by_id.items()}
+        realized: Dict[int, Cohort] = {}
+
+        def _realize(i: int) -> Cohort:
+            if i in realized:
+                return realized[i]
+            node = nodes[i]
+            if node.op == "cohort_from_events":
+                nm = node.get("name")
+                ev = vals.get(node.inputs[0])
+                c = Cohort(name=nm, description=f"subjects with event {nm}",
+                           subjects=vals[i], n_patients=self.n_patients,
+                           events=ev, window=self._window)
+            else:
+                left = _realize(node.inputs[0])
+                right = _realize(node.inputs[1])
+                kind = node.get("kind")
+                c = (left.intersection(right) if kind == "&"
+                     else left.union(right) if kind == "|"
+                     else left.difference(right))
+            if i in cohort_names:
+                c.name = cohort_names[i]
+            realized[i] = c
+            return c
+
+        cohorts = {}
+        for i, names in names_by_id.items():
+            c = _realize(i)
+            for name in names:
+                cohorts[name] = (c if c.name == name
+                                 else dataclasses.replace(c, name=name))
+
+        flow = None
+        if self._flow_names:
+            fid = out_ids[_FLOW_OUT]
+            flow = CohortFlow([_realize(j) for j in nodes[fid].inputs])
+            prev = None
+            for nm, stage in zip(self._flow_names, flow.steps):
+                n = stage.subject_count()
+                log.record(op=f"flow:{nm}",
+                           inputs={} if prev is None else {"prev": _Count(prev)},
+                           outputs={nm: _Count(n)}, params={})
+                prev = n
+
+        features: Dict[str, Any] = {}
+        checks: Dict[str, Dict[str, int]] = {}
+        for name in self._feature_names:
+            fnode = nodes[out_ids[name]]
+            cohort = _realize(fnode.inputs[0])
+            pats = vals.get(fnode.inputs[1]) if len(fnode.inputs) > 1 else None
+            from repro.core.feature_driver import FeatureDriver
+
+            fd = FeatureDriver(cohort, pats)
+            kwargs = {k: v for k, v in (fnode.get("kwargs") or ())}
+            if fnode.get("kind") == "dense":
+                features[name] = fd.dense_features(**kwargs)
+            else:
+                features[name] = fd.token_sequences(**kwargs)
+            checks[name] = dict(fd.checks)
+            log.record(op=f"featurize:{name}",
+                       inputs={cohort.name: _Count(cohort.subject_count())},
+                       outputs={name: _Count(checks[name].get(
+                           "events_total", 0))},
+                       params={"kind": fnode.get("kind")})
+
+        return StudyResult(events=events, cohorts=cohorts, flow=flow,
+                           features=features, log=log, plan=plan,
+                           feature_checks=checks)
+
+
+class _Count:
+    """Adapter giving OperationLog.record a ``.count`` to introspect."""
+
+    def __init__(self, c: int) -> None:
+        self.count = c
+
+
+def flow_rows_from_log(log: OperationLog) -> List[Dict[str, object]]:
+    """Rebuild the CohortFlow flowchart rows from an OperationLog alone —
+    the paper's promise that flowcharts come from metadata, not re-execution."""
+    rows: List[Dict[str, object]] = []
+    prev: Optional[int] = None
+    for e in log.entries:
+        if not e["op"].startswith("flow:"):
+            continue
+        stage = e["op"][len("flow:"):]
+        n = next(iter(e["outputs"].values()))
+        rows.append({"stage": stage, "subjects": n,
+                     "removed": (prev - n) if prev is not None else 0})
+        prev = n
+    return rows

@@ -1,0 +1,268 @@
+"""Plan executor: one jit-compiled XLA program per (plan, table spec, engine).
+
+The executor walks a (usually optimizer-rewritten) ``Plan`` and evaluates each
+node.  Everything array-valued — scans, masks, dedupe, event conformance,
+compaction, cohort bitset algebra, registered transformers — runs inside a
+single ``jax.jit`` body, so XLA fuses the shared-scan mask pipelines end to
+end; host-side nodes (``featurize``, ``flow``) run after, on realized values.
+
+jit caching: the traced closure is memoized on ``(plan structural key, engine,
+n_patients)``; ``jax.jit`` then re-specializes per table spec (shapes/dtypes)
+as usual, giving the "plan structure + table spec" cache key for free.
+
+Provenance: the jitted body returns a per-node row/subject count alongside the
+outputs, and ``execute`` appends one ``OperationLog`` entry per executed node
+— no manual ``log.record`` calls in user code, and flowcharts reconstruct
+from the log alone (see ``api.flow_rows_from_log``).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transformers as _tr
+from repro.core.cohort import Bitset
+from repro.core.columnar import ColumnarTable, is_null
+from repro.core.events import make_events
+from repro.core.metadata import OperationLog
+from repro.study.plan import COHORT_OPS, Plan, TABLE_OPS
+
+__all__ = ["execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache"]
+
+
+# Registered transformer free functions usable from ``transform`` nodes.
+# Values are (fn, wants_n_patients); params must stay hashable in the plan.
+def _registry() -> Dict[str, Tuple[Callable, bool]]:
+    fns = {}
+    for name in ("observation_period", "follow_up", "trackloss", "exposures",
+                 "fractures", "drug_prescriptions", "drug_interactions",
+                 "bladder_cancer", "infarctus", "heart_failure"):
+        fn = getattr(_tr, name)
+        wants = "n_patients" in inspect.signature(fn).parameters
+        fns[name] = (fn, wants)
+    return fns
+
+
+TRANSFORMS = _registry()
+
+_JIT_CACHE: Dict[Tuple, Callable] = {}
+
+
+def jit_cache_info() -> Dict[str, int]:
+    return {"plans": len(_JIT_CACHE)}
+
+
+def clear_jit_cache() -> None:
+    _JIT_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# node evaluation (traced)
+# ---------------------------------------------------------------------------
+def _compact_table(t: ColumnarTable, engine: str) -> ColumnarTable:
+    if engine == "xla":
+        return t.compact()
+    if engine != "pallas":
+        raise ValueError(f"unknown engine {engine!r}")
+    from repro.kernels import ops as kops
+
+    cols = {}
+    count = None
+    for name, col in t.columns.items():
+        out, cnt = kops.filter_compact(col, t.valid)
+        cols[name] = out
+        count = cnt if count is None else count
+    valid = jnp.arange(t.capacity) < count
+    return ColumnarTable(cols, valid, count.astype(jnp.int32))
+
+
+def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
+               engine: str):
+    op = node.op
+    if op == "scan":
+        src = node.get("source")
+        if src not in env:
+            raise KeyError(f"plan scans source {src!r} but run() got "
+                           f"{sorted(env)}")
+        return env[src]
+    if op == "select":
+        return ins[0].select(list(node.get("cols")))
+    if op == "drop_nulls":
+        return ins[0].drop_nulls(list(node.get("cols")))
+    if op == "value_filter":
+        allowed = jnp.asarray(np.asarray(node.get("codes"), np.int32))
+        return ins[0].filter(jnp.isin(ins[0].columns[node.get("col")], allowed))
+    if op == "fused_mask":
+        t = ins[0]
+        mask = t.valid
+        for c in node.get("null_cols"):
+            mask = mask & ~is_null(t.columns[c])
+        for col, codes in node.get("filters"):
+            allowed = jnp.asarray(np.asarray(codes, np.int32))
+            mask = mask & jnp.isin(t.columns[col], allowed)
+        return ColumnarTable(t.columns, mask, mask.sum().astype(jnp.int32))
+    if op == "dedupe":
+        from repro.core.extraction import dedupe_by
+
+        return dedupe_by(ins[0], list(node.get("keys")))
+    if op == "conform_events":
+        t = ins[0]
+        end_col, group_col, weight_col = (node.get("end_col"),
+                                          node.get("group_col"),
+                                          node.get("weight_col"))
+        return make_events(
+            patient_id=t.columns["patient_id"],
+            category=node.get("category"),
+            value=t.columns[node.get("value_col")],
+            start=t.columns[node.get("start_col")],
+            end=t.columns[end_col] if end_col else None,
+            group_id=t.columns[group_col] if group_col else None,
+            weight=t.columns[weight_col] if weight_col else None,
+            valid=t.valid,
+        )
+    if op == "compact":
+        return _compact_table(ins[0], node.get("engine") or engine)
+    if op == "transform":
+        fn, wants_np = TRANSFORMS[node.get("fn")]
+        kwargs = {k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in (node.get("kwargs") or ())}
+        if wants_np:
+            kwargs.setdefault("n_patients", n_patients)
+        return fn(*ins, **kwargs)
+    if op == "concat":
+        return ColumnarTable.concat(list(ins))
+    if op == "cohort_from_events":
+        ev = ins[0]
+        return Bitset.from_indices(ev.columns["patient_id"], ev.valid, n_patients)
+    if op == "cohort_op":
+        a, b = ins
+        kind = node.get("kind")
+        if kind == "&":
+            return a & b
+        if kind == "|":
+            return a | b
+        return a & ~b
+    raise ValueError(f"unknown traced op {node.op!r}")
+
+
+def _node_count(node, val) -> jax.Array:
+    if node.op in COHORT_OPS:
+        return Bitset.count(val)
+    return val.count.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# plan-level execution
+# ---------------------------------------------------------------------------
+def traced_ids(plan: Plan) -> Tuple[int, ...]:
+    return tuple(i for i, n in enumerate(plan.nodes)
+                 if n.op in TABLE_OPS or n.op in COHORT_OPS)
+
+
+def keep_ids(plan: Plan) -> Tuple[int, ...]:
+    """Node values that must leave the jitted body: named outputs, base
+    cohort bitsets, and the event tables cohorts were built from
+    (Cohort.events).  Interior ``cohort_op`` bitsets stay internal — the
+    Study layer replays the algebra on realized operands, so exporting them
+    would be a dead device->host transfer per node.  Everything else stays
+    internal so XLA fuses the mask pipelines instead of materializing each
+    intermediate into an output buffer."""
+    traced = set(traced_ids(plan))
+    keep = {i for _, i in plan.outputs if i in traced}
+    for i, n in enumerate(plan.nodes):
+        if n.op == "cohort_from_events":
+            keep.add(i)
+            keep.update(j for j in n.inputs if j in traced)
+    return tuple(sorted(keep))
+
+
+def run_plan_body(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
+                  engine: str):
+    """Pure traced body: node id -> value for every array-valued node, plus
+    per-node counts.  Reused verbatim by ``distributed.pipeline`` under
+    ``shard_map``."""
+    vals: Dict[int, Any] = {}
+    counts: Dict[int, jax.Array] = {}
+    for i in traced_ids(plan):
+        node = plan.nodes[i]
+        ins = [vals[j] for j in node.inputs]
+        vals[i] = _eval_node(node, ins, env, n_patients, engine)
+        counts[i] = _node_count(node, vals[i])
+    return vals, counts
+
+
+def _jitted_runner(plan: Plan, n_patients: int, engine: str) -> Callable:
+    key = (plan.key(), n_patients, engine)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        keep = keep_ids(plan)
+
+        def body(env):
+            vals, counts = run_plan_body(plan, env, n_patients, engine)
+            # counts leave as ONE stacked vector: a single host transfer for
+            # provenance instead of one device sync per node.
+            ids = tuple(sorted(counts))
+            return ({i: vals[i] for i in keep},
+                    jnp.stack([counts[i] for i in ids]))
+
+        fn = jax.jit(body)
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
+            engine: str = "xla", log: Optional[OperationLog] = None,
+            jit: bool = True) -> Dict[int, Any]:
+    """Evaluate every array-valued node of ``plan`` over ``tables``.
+
+    Returns {node id: value} for the ``keep_ids`` subset — named outputs,
+    cohort bitsets and their source event tables (intermediates never leave
+    the compiled program).  Host ops (featurize/flow) are the Study layer's
+    job — they need realized Cohort objects (see ``api.Study.run``).
+    """
+    missing = [s for s in plan.sources() if s not in tables]
+    if missing:
+        raise KeyError(f"plan scans source(s) {missing} but run() only got "
+                       f"{sorted(tables)}")
+    env = {src: tables[src] for src in plan.sources()}
+    if jit:
+        vals, counts_vec = _jitted_runner(plan, n_patients, engine)(env)
+        if log is not None:
+            ids = traced_ids(plan)
+            host = np.asarray(counts_vec)
+            record_plan(plan, dict(zip(ids, (int(c) for c in host))), log, engine)
+    else:
+        vals, counts = run_plan_body(plan, env, n_patients, engine)
+        vals = {i: vals[i] for i in keep_ids(plan)}
+        if log is not None:
+            record_plan(plan, {i: int(c) for i, c in counts.items()}, log, engine)
+    return vals
+
+
+def record_plan(plan: Plan, counts: Dict[int, int], log: OperationLog,
+                engine: str) -> None:
+    """One OperationLog entry per executed node — automatic provenance.
+    ``counts`` must already be host ints (see ``execute`` / the sharded path
+    in ``distributed.pipeline``: counts cross as one stacked vector)."""
+    out_names = {i: name for name, i in plan.outputs}
+    host_counts = {i: int(c) for i, c in counts.items()}
+
+    class _N:  # OperationLog.record introspects ``.count``
+        def __init__(self, c):
+            self.count = c
+
+    for i, c in host_counts.items():
+        node = plan.nodes[i]
+        ins = {f"#{j}:{plan.nodes[j].label()}": _N(host_counts[j])
+               for j in node.inputs if j in host_counts}
+        label = out_names.get(i, node.label())
+        params = {k: (v if isinstance(v, (int, float, str, bool, type(None)))
+                      else len(v))
+                  for k, v in node.params}
+        params["engine"] = engine
+        log.record(op=f"plan:{node.op}:{label}", inputs=ins,
+                   outputs={label: _N(c)}, params=params)

@@ -1,0 +1,215 @@
+"""Plan rewrites: shared scans, fused masks, deferred compaction, DCE.
+
+The passes encode the paper's three columnar properties (§3.4) at the *plan*
+level instead of inside each extractor:
+
+  * ``merge_projections`` — all extractors reading one source share a single
+    scan + a single union projection, so a study makes ONE pass over DCIR
+    instead of one per extractor.
+  * ``fuse_masks`` — adjacent null-filter / value-filter nodes collapse into
+    one ``fused_mask`` node, executed as a single vectorized predicate (one
+    mask kernel per extractor branch instead of one per step).
+  * ``defer_compaction`` — compaction (the only materialization) is removed
+    from plan interiors and appears exactly once per named table output.
+  * ``dce`` — drops nodes unreachable from any output (rewrites above strand
+    the per-extractor projections).
+
+All passes are pure ``Plan -> Plan`` functions; ``optimize`` is the default
+pipeline used by the executor.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.study.plan import MASK_OPS, Node, Plan, PlanBuilder
+
+__all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction", "dce"]
+
+
+def _rebuild(plan: Plan, replace: Dict[int, Node], drop: Optional[set] = None,
+             redirect: Optional[Dict[int, int]] = None) -> Plan:
+    """Re-emit ``plan`` through a fresh builder with node rewrites applied.
+
+    ``replace`` swaps a node's definition; ``redirect`` makes consumers (and
+    outputs) read another old node's value instead; ``drop`` marks old ids
+    whose definition must not be re-emitted (their redirect target is used).
+    Hash-consing in the builder re-deduplicates rewritten nodes.
+    """
+    drop = drop or set()
+    redirect = redirect or {}
+    b = PlanBuilder()
+    new_id: Dict[int, int] = {}
+
+    def resolve(old: int) -> int:
+        seen = set()
+        while old in redirect:
+            if old in seen:
+                raise ValueError("cyclic redirect in plan rewrite")
+            seen.add(old)
+            old = redirect[old]
+        return new_id[old]
+
+    for i, node in enumerate(plan.nodes):
+        if i in drop or i in redirect:
+            continue
+        n = replace.get(i, node)
+        inputs = tuple(resolve(j) for j in n.inputs)
+        new_id[i] = b.add(n.op, inputs, **dict(n.params))
+    for name, i in plan.outputs:
+        b.set_output(name, resolve(i))
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+def merge_projections(plan: Plan) -> Plan:
+    """One shared scan+projection per source: the union of every consumer's
+    column set.  (Scan nodes themselves already unify by hash-consing; this
+    pass merges the per-extractor ``select`` nodes hanging off them.)"""
+    selects_by_scan: Dict[int, List[int]] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op == "select" and plan.nodes[n.inputs[0]].op == "scan":
+            selects_by_scan.setdefault(n.inputs[0], []).append(i)
+
+    replace: Dict[int, Node] = {}
+    redirect: Dict[int, int] = {}
+    for scan_id, sel_ids in selects_by_scan.items():
+        if len(sel_ids) < 2:
+            continue
+        union = sorted({c for i in sel_ids for c in plan.nodes[i].get("cols")})
+        keep = sel_ids[0]
+        replace[keep] = Node("select", (scan_id,), (("cols", tuple(union)),))
+        for i in sel_ids[1:]:
+            redirect[i] = keep
+    if not (replace or redirect):
+        return plan
+    return _rebuild(plan, replace, redirect=redirect)
+
+
+# ---------------------------------------------------------------------------
+def _mask_params(node: Node) -> Tuple[Tuple[str, ...], Tuple]:
+    """(null_cols, value_filters) contribution of one mask-op node."""
+    if node.op == "drop_nulls":
+        return tuple(node.get("cols")), ()
+    if node.op == "value_filter":
+        return (), ((node.get("col"), node.get("codes")),)
+    if node.op == "fused_mask":
+        return tuple(node.get("null_cols")), tuple(node.get("filters"))
+    raise AssertionError(node.op)
+
+
+def fuse_masks(plan: Plan) -> Plan:
+    """Collapse chains of mask-only nodes into single ``fused_mask`` nodes.
+
+    Every drop_nulls/value_filter is first normalized to a fused_mask; then a
+    fused_mask whose (sole-consumer) input is another fused_mask absorbs it.
+    Runs to fixpoint, so arbitrarily long mask chains become one node.
+    """
+    # normalize
+    replace = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op in MASK_OPS:
+            nulls, filters = _mask_params(n)
+            replace[i] = Node("fused_mask", n.inputs,
+                              (("filters", filters), ("null_cols", nulls)))
+    plan = _rebuild(plan, replace)
+
+    while True:
+        consumers = plan.consumers()
+        out_ids = {i for _, i in plan.outputs}
+        redirect: Dict[int, int] = {}
+        replace = {}
+        for i, n in enumerate(plan.nodes):
+            if n.op != "fused_mask":
+                continue
+            j = n.inputs[0]
+            up = plan.nodes[j]
+            if (up.op != "fused_mask" or len(consumers[j]) != 1
+                    or j in replace or j in out_ids):
+                continue
+            u_nulls, u_filters = _mask_params(up)
+            n_nulls, n_filters = _mask_params(n)
+            nulls = u_nulls + tuple(c for c in n_nulls if c not in u_nulls)
+            replace[i] = Node("fused_mask", up.inputs,
+                              (("filters", u_filters + n_filters),
+                               ("null_cols", nulls)))
+            redirect[j] = i  # j had only this consumer; drop its definition
+        if not replace:
+            return plan
+        # re-emit: replaced nodes take their new def; absorbed nodes vanish.
+        b = PlanBuilder()
+        new_id: Dict[int, int] = {}
+        absorbed = set(redirect)
+        for i, node in enumerate(plan.nodes):
+            if i in absorbed:
+                continue
+            n = replace.get(i, node)
+            inputs = tuple(new_id[j] for j in n.inputs)
+            new_id[i] = b.add(n.op, inputs, **dict(n.params))
+        for name, i in plan.outputs:
+            b.set_output(name, new_id[i])
+        plan = b.build()
+
+
+# ---------------------------------------------------------------------------
+def defer_compaction(plan: Plan) -> Plan:
+    """Exactly one materialization per table output.
+
+    Interior compact nodes (anything downstream still reads them) are
+    bypassed — masks and event conformance operate on uncompacted tables for
+    free — and every named table output gets a final compact if it lacks one.
+    """
+    out_ids = {i for _, i in plan.outputs}
+    consumers = plan.consumers()
+    redirect: Dict[int, int] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op == "compact" and consumers[i] and i not in out_ids:
+            redirect[i] = n.inputs[0]
+    if redirect:
+        plan = _rebuild(plan, {}, redirect=redirect)
+
+    # append a compact to table outputs that end uncompacted
+    b = PlanBuilder()
+    new_id: Dict[int, int] = {}
+    for i, n in enumerate(plan.nodes):
+        new_id[i] = b.add(n.op, tuple(new_id[j] for j in n.inputs), **dict(n.params))
+    from repro.study.plan import TABLE_OPS
+    for name, i in plan.outputs:
+        n = plan.nodes[i]
+        if n.op in TABLE_OPS and n.op not in ("compact", "transform"):
+            b.set_output(name, b.compact(new_id[i]))
+        else:
+            b.set_output(name, new_id[i])
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+def dce(plan: Plan) -> Plan:
+    """Drop nodes unreachable from any named output."""
+    live = set()
+    stack = [i for _, i in plan.outputs]
+    while stack:
+        i = stack.pop()
+        if i in live:
+            continue
+        live.add(i)
+        stack.extend(plan.nodes[i].inputs)
+    if len(live) == len(plan.nodes):
+        return plan
+    b = PlanBuilder()
+    new_id: Dict[int, int] = {}
+    for i, n in enumerate(plan.nodes):
+        if i not in live:
+            continue
+        new_id[i] = b.add(n.op, tuple(new_id[j] for j in n.inputs), **dict(n.params))
+    for name, i in plan.outputs:
+        b.set_output(name, new_id[i])
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+def optimize(plan: Plan) -> Plan:
+    """Default rewrite pipeline (executor calls this unless told not to)."""
+    plan = merge_projections(plan)
+    plan = fuse_masks(plan)
+    plan = defer_compaction(plan)
+    return dce(plan)

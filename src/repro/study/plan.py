@@ -1,0 +1,215 @@
+"""Plan IR: the lazy query representation behind ``repro.study``.
+
+SCALPEL3's eager API runs one projection→mask→compaction pass per extractor,
+so N extractors over DCIR cost N scans and N argsort compactions.  The Plan IR
+defers everything: user code (the ``Study`` builder, retrofitted ``Extractor``
+and ``Cohort`` wrappers) appends *nodes* to a ``PlanBuilder``; the optimizer
+rewrites the node graph (shared scans, fused masks, deferred compaction); the
+executor jit-compiles the whole plan into one XLA program.
+
+Design notes:
+  * Nodes are immutable value objects ``(op, inputs, params)`` — hashable, so
+    the builder hash-conses (identical sub-plans share nodes) and the executor
+    can key its jit cache on plan structure alone.
+  * ``inputs`` are node ids (ints); the node list is append-only, so a built
+    ``Plan``'s node tuple is always topologically ordered.
+  * ``params`` are a frozen (sorted key/value tuple) mapping; lists/dicts are
+    recursively frozen so any user-supplied config stays hashable.
+
+Node vocabulary (executor semantics in ``executor.py``):
+  scan(source)                      -> flat table from the run-time env
+  select(cols)                      -> column projection       (metadata only)
+  drop_nulls(cols)                  -> null mask               (mask algebra)
+  value_filter(col, codes)          -> whitelist mask          (mask algebra)
+  fused_mask(null_cols, filters)    -> optimizer-fused single predicate
+  dedupe(keys)                      -> DISTINCT over keys (sort + run heads)
+  conform_events(...)               -> Event-schema conformance
+  compact()                         -> the one materialization per output
+  cohort_from_events(name)          -> packed subject bitset from an event table
+  cohort_op(kind ∈ {&,|,-})         -> bitset algebra over two cohorts
+  transform(fn, kwargs)             -> registered List[Event]->List[Event] fn
+  featurize(kind, kwargs)           -> FeatureDriver export (host-side)
+  flow(names)                       -> CohortFlow fold over cohort nodes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+__all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS"]
+
+# ops whose value is a ColumnarTable
+TABLE_OPS = frozenset({
+    "scan", "select", "drop_nulls", "value_filter", "fused_mask", "dedupe",
+    "conform_events", "compact", "transform", "concat",
+})
+# ops whose value is a packed subject bitset
+COHORT_OPS = frozenset({"cohort_from_events", "cohort_op"})
+# mask-only ops the optimizer may fuse into one vectorized predicate
+MASK_OPS = frozenset({"drop_nulls", "value_filter"})
+# ops executed host-side, after the jitted portion
+HOST_OPS = frozenset({"featurize", "flow"})
+
+
+def _freeze(v: Any) -> Any:
+    """Recursively convert params to hashable value objects."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, (set, frozenset)):
+        return tuple(sorted(_freeze(x) for x in v))
+    if isinstance(v, Mapping):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (str, bytes, int, float, bool, type(None))):
+        return v
+    raise TypeError(f"plan param of unhashable type {type(v).__name__}: {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One IR operation: ``op`` applied to the values of ``inputs``."""
+
+    op: str
+    inputs: Tuple[int, ...]
+    params: Tuple[Tuple[str, Any], ...]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    def label(self) -> str:
+        name = self.get("name")
+        return f"{self.op}:{name}" if name else self.op
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An immutable, topologically-ordered node graph with named outputs."""
+
+    nodes: Tuple[Node, ...]
+    outputs: Tuple[Tuple[str, int], ...]
+
+    # -- identity ------------------------------------------------------------
+    def key(self) -> Tuple:
+        """Structural identity — the jit-cache key component."""
+        return (self.nodes, self.outputs)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def output_ids(self) -> Dict[str, int]:
+        return dict(self.outputs)
+
+    def count_ops(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for n in self.nodes:
+            out[n.op] = out.get(n.op, 0) + 1
+        return out
+
+    def consumers(self) -> Dict[int, List[int]]:
+        cons: Dict[int, List[int]] = {i: [] for i in range(len(self.nodes))}
+        for i, n in enumerate(self.nodes):
+            for j in n.inputs:
+                cons[j].append(i)
+        return cons
+
+    def sources(self) -> Tuple[str, ...]:
+        return tuple(sorted({n.get("source") for n in self.nodes if n.op == "scan"}))
+
+    def render(self) -> str:
+        """Human-readable plan dump (debugging / notebooks)."""
+        names = {i: name for name, i in self.outputs}
+        lines = []
+        for i, n in enumerate(self.nodes):
+            params = ", ".join(f"{k}={v!r}" for k, v in n.params)
+            tag = f"  -> {names[i]}" if i in names else ""
+            ins = ",".join(str(j) for j in n.inputs)
+            lines.append(f"[{i:3d}] {n.op}({ins}) {params}{tag}")
+        return "\n".join(lines)
+
+
+class PlanBuilder:
+    """Append-only, hash-consing plan constructor."""
+
+    def __init__(self) -> None:
+        self._nodes: List[Node] = []
+        self._cse: Dict[Node, int] = {}
+        self._outputs: Dict[str, int] = {}
+
+    # -- generic -------------------------------------------------------------
+    def add(self, op: str, inputs: Sequence[int] = (), **params: Any) -> int:
+        for j in inputs:
+            if not (0 <= j < len(self._nodes)):
+                raise ValueError(f"{op}: unknown input node {j}")
+        node = Node(op, tuple(int(j) for j in inputs),
+                    tuple(sorted((k, _freeze(v)) for k, v in params.items())))
+        if node in self._cse:
+            return self._cse[node]
+        self._nodes.append(node)
+        nid = len(self._nodes) - 1
+        self._cse[node] = nid
+        return nid
+
+    def set_output(self, name: str, nid: int) -> int:
+        self._outputs[name] = nid
+        return nid
+
+    def node(self, nid: int) -> Node:
+        return self._nodes[nid]
+
+    def build(self) -> Plan:
+        return Plan(tuple(self._nodes), tuple(sorted(self._outputs.items())))
+
+    # -- table ops -----------------------------------------------------------
+    def scan(self, source: str) -> int:
+        return self.add("scan", source=source)
+
+    def select(self, t: int, cols: Sequence[str]) -> int:
+        return self.add("select", (t,), cols=tuple(sorted(set(cols))))
+
+    def drop_nulls(self, t: int, cols: Sequence[str]) -> int:
+        return self.add("drop_nulls", (t,), cols=tuple(cols))
+
+    def value_filter(self, t: int, col: str, codes: Sequence[int]) -> int:
+        return self.add("value_filter", (t,), col=col,
+                        codes=tuple(int(c) for c in codes))
+
+    def dedupe(self, t: int, keys: Sequence[str]) -> int:
+        return self.add("dedupe", (t,), keys=tuple(keys))
+
+    def conform_events(self, t: int, name: str, category: int, value_col: str,
+                       start_col: str, end_col: Optional[str] = None,
+                       group_col: Optional[str] = None,
+                       weight_col: Optional[str] = None) -> int:
+        return self.add("conform_events", (t,), name=name, category=int(category),
+                        value_col=value_col, start_col=start_col, end_col=end_col,
+                        group_col=group_col, weight_col=weight_col)
+
+    def compact(self, t: int, engine: Optional[str] = None) -> int:
+        return self.add("compact", (t,), engine=engine)
+
+    def transform(self, fn: str, inputs: Sequence[int], name: Optional[str] = None,
+                  **kwargs: Any) -> int:
+        return self.add("transform", tuple(inputs), fn=fn,
+                        name=name or fn, kwargs=kwargs)
+
+    def concat(self, tables: Sequence[int], name: str = "concat") -> int:
+        return self.add("concat", tuple(tables), name=name)
+
+    # -- cohort ops ----------------------------------------------------------
+    def cohort_from_events(self, events: int, name: str) -> int:
+        return self.add("cohort_from_events", (events,), name=name)
+
+    def cohort_op(self, kind: str, left: int, right: int, name: str) -> int:
+        if kind not in ("&", "|", "-"):
+            raise ValueError(f"cohort_op kind must be one of & | -, got {kind!r}")
+        return self.add("cohort_op", (left, right), kind=kind, name=name)
+
+    # -- host ops ------------------------------------------------------------
+    def featurize(self, cohort: int, name: str, kind: str = "dense",
+                  patients: Optional[int] = None, **kwargs: Any) -> int:
+        ins = (cohort,) if patients is None else (cohort, patients)
+        return self.add("featurize", ins, name=name, kind=kind, kwargs=kwargs)
+
+    def flow(self, cohorts: Sequence[int], name: str = "flow") -> int:
+        return self.add("flow", tuple(cohorts), name=name)

@@ -1,0 +1,280 @@
+"""Lazy query-plan layer (``repro.study``): IR, optimizer rewrites, executor
+parity with the eager API, automatic provenance, and the satellite regressions
+(dedupe dead-code path, Cohort.union window semantics)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Category, Cohort, DCIR_SCHEMA, OperationLog, biology_acts, dedupe_by,
+    drug_dispenses, exposures, flatten_star, medical_acts_dcir,
+    practitioner_encounters,
+)
+from repro.core.columnar import ColumnarTable
+from repro.core.events import make_events
+from repro.data.synthetic import SyntheticConfig, generate_dcir
+from repro.study import (
+    PlanBuilder, Study, execute, flow_rows_from_log, fuse_masks,
+    merge_projections, optimize,
+)
+
+CFG = SyntheticConfig(n_patients=300, seed=13)
+
+
+@pytest.fixture(scope="module")
+def dcir():
+    return generate_dcir(CFG)
+
+
+@pytest.fixture(scope="module")
+def flat(dcir):
+    return flatten_star(DCIR_SCHEMA, dcir)[0]
+
+
+def _study(extractors):
+    s = Study(n_patients=CFG.n_patients)
+    for name, ex in extractors:
+        s.extract(ex, name=name)
+    return s
+
+
+FOUR = [("drugs", drug_dispenses()), ("acts", medical_acts_dcir()),
+        ("bio", biology_acts()), ("enc", practitioner_encounters())]
+
+
+# ---------------------------------------------------------------------------
+# optimizer structure (the tentpole acceptance: shared scan, one compaction
+# per output, fused masks)
+# ---------------------------------------------------------------------------
+def test_shared_scan_single_projection():
+    opt = _study(FOUR).optimized_plan()
+    ops = opt.count_ops()
+    assert ops["scan"] == 1                     # one pass over DCIR
+    assert ops["select"] == 1                   # union projection
+    assert ops["compact"] == 4                  # exactly one per output
+    assert "drop_nulls" not in ops and "value_filter" not in ops
+    # union projection covers every extractor's column set
+    sel = next(n for n in opt.nodes if n.op == "select")
+    for _, ex in FOUR:
+        assert set(ex.projection()) <= set(sel.get("cols"))
+
+
+def test_mask_fusion_collapses_chains():
+    # drug_dispenses(codes=...) is a private drop_nulls -> value_filter chain:
+    # it must fuse into ONE node carrying both the null mask and the
+    # whitelist.  bio/enc share one null-mask node (two consumers), which must
+    # stay shared — computed once — not be duplicated into both branches.
+    exts = [("drugs", drug_dispenses(codes=list(range(20)))),
+            ("bio", biology_acts()), ("enc", practitioner_encounters())]
+    raw = _study(exts).plan()
+    n_masks_raw = sum(raw.count_ops().get(k, 0)
+                      for k in ("drop_nulls", "value_filter"))
+    opt = optimize(raw)
+    assert n_masks_raw == 5      # drugs: 2; bio/enc: shared null + 2 filters
+    assert opt.count_ops()["fused_mask"] == 4
+    assert not any(n.op in ("drop_nulls", "value_filter") for n in opt.nodes)
+    both = [n for n in opt.nodes if n.op == "fused_mask"
+            and n.get("filters") and n.get("null_cols")]
+    assert len(both) == 1        # the fused drugs chain
+    shared = [i for i, n in enumerate(opt.nodes) if n.op == "fused_mask"
+              and len(opt.consumers()[i]) == 2]
+    assert len(shared) == 1      # bio/enc's common null mask
+
+
+def test_compaction_deferred_to_outputs():
+    b = PlanBuilder()
+    t = b.select(b.scan("DCIR"), ["patient_id", "cip13", "execution_date"])
+    t = b.compact(t)                            # interior compact: bypassed
+    t = b.drop_nulls(t, ["cip13"])
+    c = b.conform_events(t, name="x", category=1, value_col="cip13",
+                         start_col="execution_date")
+    b.set_output("x", c)
+    opt = optimize(b.build())
+    assert opt.count_ops()["compact"] == 1
+    out_node = opt.nodes[opt.output_ids["x"]]
+    assert out_node.op == "compact"
+
+
+def test_hash_consing_shares_identical_subplans():
+    b = PlanBuilder()
+    a = drug_dispenses().contribute(b)
+    c = drug_dispenses().contribute(b)
+    assert a == c                               # identical extractor: one branch
+
+
+# ---------------------------------------------------------------------------
+# executor parity with the eager API
+# ---------------------------------------------------------------------------
+def test_study_matches_eager_per_extractor(flat):
+    res = _study(FOUR).run({"DCIR": flat})
+    for name, ex in FOUR:
+        eager = ex(flat).to_numpy()
+        lazy = res.events[name].to_numpy()
+        for k in eager:
+            assert (eager[k] == lazy[k]).all(), (name, k)
+
+
+def test_study_unoptimized_matches_optimized(flat):
+    a = _study(FOUR).run({"DCIR": flat}, optimize=False)
+    b = _study(FOUR).run({"DCIR": flat}, optimize=True)
+    for name in a.events:
+        x, y = a.events[name].to_numpy(), b.events[name].to_numpy()
+        for k in x:
+            assert (x[k] == y[k]).all(), (name, k)
+
+
+def test_transform_node_matches_free_function(flat):
+    res = (Study(n_patients=CFG.n_patients)
+           .extract(drug_dispenses(), name="drugs")
+           .transform("exposures", "drugs", name="expo", purview_days=60)
+           .run({"DCIR": flat}))
+    drugs = drug_dispenses()(flat)
+    eager = exposures(drugs, CFG.n_patients, purview_days=60).to_numpy()
+    lazy = res.events["expo"].to_numpy()
+    for k in eager:
+        assert (eager[k] == lazy[k]).all(), k
+
+
+def test_cohort_algebra_and_flow(flat, dcir):
+    res = (Study(n_patients=CFG.n_patients)
+           .extract(drug_dispenses(), name="drugs")
+           .extract(medical_acts_dcir(), name="acts")
+           .patients("IR_BEN")
+           .cohort("base", "extract_patients")
+           .cohort("drugged", "drugs")
+           .cohort("final", "drugged & base - acts")
+           .flow("base", "drugged", "final")
+           .run({"DCIR": flat, "IR_BEN": dcir["IR_BEN"]}))
+    drugs = drug_dispenses()(flat)
+    acts = medical_acts_dcir()(flat)
+    dr = Cohort.from_events("drugs", drugs, CFG.n_patients)
+    ac = Cohort.from_events("acts", acts, CFG.n_patients)
+    from repro.core import patients
+
+    base = Cohort.from_patient_table("base", patients(dcir["IR_BEN"]),
+                                     CFG.n_patients)
+    want = dr.intersection(base).difference(ac)
+    assert res.cohorts["final"].subject_count() == want.subject_count()
+    assert (np.asarray(res.cohorts["final"].subjects)
+            == np.asarray(want.subjects)).all()
+    stages = [r["subjects"] for r in res.flow.flowchart()]
+    assert stages[0] >= stages[1] >= stages[2]
+
+
+def test_cohort_aliases_both_realized(flat):
+    # two cohort declarations hash-consing to the same plan node must BOTH
+    # appear in the result, each under its own name
+    res = (Study(n_patients=CFG.n_patients)
+           .extract(drug_dispenses(), name="drugs")
+           .cohort("a", "drugs")
+           .cohort("b", "drugs")
+           .run({"DCIR": flat}))
+    assert set(res.cohorts) == {"a", "b"}
+    assert res.cohorts["a"].name == "a" and res.cohorts["b"].name == "b"
+    assert (res.cohorts["a"].subject_count()
+            == res.cohorts["b"].subject_count())
+
+
+def test_jit_cache_reused_across_identical_studies(flat):
+    from repro.study import clear_jit_cache, jit_cache_info
+
+    clear_jit_cache()
+    _study(FOUR).run({"DCIR": flat})
+    assert jit_cache_info()["plans"] == 1
+    _study(FOUR).run({"DCIR": flat})            # same structure: cache hit
+    assert jit_cache_info()["plans"] == 1
+    _study(FOUR[:2]).run({"DCIR": flat})        # new structure: new entry
+    assert jit_cache_info()["plans"] == 2
+
+
+# ---------------------------------------------------------------------------
+# automatic provenance
+# ---------------------------------------------------------------------------
+def test_provenance_automatic_and_flow_reconstructs(flat, dcir):
+    res = (Study(n_patients=CFG.n_patients)
+           .extract(drug_dispenses(), name="drugs")
+           .patients("IR_BEN")
+           .cohort("base", "extract_patients")
+           .cohort("drugged", "drugs")
+           .cohort("final", "drugged & base")
+           .flow("base", "drugged", "final")
+           .run({"DCIR": flat, "IR_BEN": dcir["IR_BEN"]}))
+    # no manual log.record call anywhere above; every plan node is logged
+    assert len(res.log.entries) >= len([n for n in res.plan.nodes
+                                        if n.op not in ("featurize", "flow")])
+    removed = [e for e in res.log.entries if e["op"].startswith("plan:fused_mask")]
+    assert removed and all(e["in"] >= e["out"]
+                           for e in OperationLog.from_json(
+                               res.log.to_json()).flowchart()
+                           if e["stage"].startswith("plan:fused_mask"))
+    # flowchart reconstructs from the log alone (paper §3.4 promise)
+    got = flow_rows_from_log(res.log)
+    want = [{k: r[k] for k in ("stage", "subjects", "removed")}
+            for r in res.flow.flowchart()]
+    assert got == want
+
+
+def test_eager_wrapper_still_logs_single_record(flat):
+    log = OperationLog()
+    drug_dispenses()(flat, log)
+    assert len(log.entries) == 1
+    assert log.entries[0]["op"] == "extract:drug_purchases[cip13]"
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+def test_dedupe_with_invalid_rows_between_equal_key_runs():
+    # rows 1 and 3 are invalid and carry keys that would split/extend runs if
+    # dedupe consulted them; sort_by sinks them, dedupe must ignore them.
+    t = ColumnarTable.from_columns(
+        {"k": np.asarray([2, 2, 2, 7, 7, 7], np.int32),
+         "v": np.asarray([0, 1, 2, 3, 4, 5], np.int32)},
+        valid=np.asarray([True, False, True, False, True, True]),
+    )
+    d = dedupe_by(t, ["k"]).compact()
+    o = d.to_numpy()
+    assert sorted(o["k"].tolist()) == [2, 7]
+    assert int(d.count) == 2
+    # first row of each *valid* run wins
+    assert set(o["v"].tolist()) == {0, 4}
+
+
+def test_union_window_spans_both():
+    bits = np.zeros(2, np.uint32)
+    a = Cohort("a", "a", jax.numpy.asarray(bits), 64, window=(100, 200))
+    b = Cohort("b", "b", jax.numpy.asarray(bits), 64, window=(150, 400))
+    assert a.union(b).window == (100, 400)          # spans both
+    assert a.intersection(b).window == (150, 200)   # overlap only
+    assert a.difference(b).window == (100, 200)     # self's coverage
+
+
+def test_union_keeps_subjects_superset(flat):
+    drugs = drug_dispenses()(flat)
+    acts = medical_acts_dcir()(flat)
+    a = Cohort.from_events("drugs", drugs, CFG.n_patients)
+    b = Cohort.from_events("acts", acts, CFG.n_patients)
+    u = a.union(b)
+    assert u.subject_count() >= max(a.subject_count(), b.subject_count())
+
+
+# ---------------------------------------------------------------------------
+# sharded plan execution (1-device mesh; multi-device covered by
+# tests/test_distributed.py-style subprocess runs on capable jax versions)
+# ---------------------------------------------------------------------------
+def test_sharded_execution_matches_local(flat, dcir):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    build = lambda: (Study(n_patients=CFG.n_patients)
+                     .extract(drug_dispenses(), name="drugs")
+                     .extract(medical_acts_dcir(), name="acts")
+                     .cohort("drugged", "drugs"))
+    local = build().run({"DCIR": flat})
+    sharded = build().run({"DCIR": flat}, mesh=mesh)
+    for name in local.events:
+        x, y = local.events[name].to_numpy(), sharded.events[name].to_numpy()
+        for k in x:
+            assert (x[k] == y[k]).all(), (name, k)
+    assert (local.cohorts["drugged"].subject_count()
+            == sharded.cohorts["drugged"].subject_count())
