@@ -21,6 +21,70 @@ def _bytes_of(tables) -> int:
     )
 
 
+def run_plan_vs_eager(n_patients: int = 4_000, seed: int = 0,
+                      repeats: int = 5) -> List[Dict]:
+    """Plan-level ``Study.flatten`` (optimizer capacity planning, one
+    jit-compiled plan) vs the eager ``flatten_star`` wrapper (trace-time
+    slack capacities) on the synthetic star schemas — the CI gate asserting
+    the plan path stays at least at parity, with a row-set parity check.
+
+    Both sides produce the *materialized* (compacted) flat table AND the
+    per-stage no-loss audit — the paper's artifacts — so the comparison
+    isolates the capacity planning, not work one path silently skips.
+    """
+    from repro.core.flattening import STAT_FIELDS
+    from repro.study import Study, execute
+
+    cfg = SyntheticConfig(n_patients=n_patients, seed=seed)
+    rows: List[Dict] = []
+    for name, schema, gen in (("DCIR", DCIR_SCHEMA, generate_dcir),
+                              ("PMSI-MCO", PMSI_MCO_SCHEMA, generate_pmsi)):
+        tables = gen(cfg)
+        n_rows = int(tables[schema.central.name].count)
+
+        def eager(ts, schema=schema):
+            f, stats = flatten_star(schema, ts)
+            return f.compact(), [{k: getattr(s, k) for k in STAT_FIELDS}
+                                 for s in stats]
+
+        jfn = jax.jit(eager)
+        flat, _ = jfn(dict(tables))
+        jax.block_until_ready(jax.tree.leaves(flat))
+        dt_eager = min(_timed(lambda: jfn(dict(tables))) for _ in range(repeats))
+
+        study = Study(n_patients=cfg.n_patients).flatten(schema, name="flat")
+        plan = study.optimized_plan(tables=dict(tables))
+        out_id = plan.output_ids["flat"]
+        run_plan = lambda: execute(plan, dict(tables))[out_id]
+        pflat = run_plan()                      # warm the jit cache
+        jax.block_until_ready(jax.tree.leaves(pflat))
+        dt_plan = min(_timed(run_plan) for _ in range(repeats))
+
+        res = study.run(dict(tables))           # stats + no-loss audit
+        res.assert_no_loss()
+        parity = (sorted(np.asarray(pflat.to_numpy()[schema.central.key])
+                         .tolist())
+                  == sorted(flat.to_numpy()[schema.central.key].tolist()))
+        rows.append({
+            "database": name,
+            "central_rows": n_rows,
+            "eager_s": round(dt_eager, 4),
+            "plan_s": round(dt_plan, 4),
+            "plan_over_eager": round(dt_plan / max(dt_eager, 1e-9), 3),
+            "plan_capacity": pflat.capacity,
+            "eager_capacity": flat.capacity,
+            "parity": "pass" if parity else "FAIL",
+        })
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.time()
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out))
+    return time.time() - t0
+
+
 def run(n_patients: int = 4_000, seed: int = 0) -> List[Dict]:
     cfg = SyntheticConfig(n_patients=n_patients, seed=seed)
     rows: List[Dict] = []

@@ -65,6 +65,26 @@ def bench_flattening() -> None:
         )
 
 
+def bench_flatten_plan(n_patients: int = 4_000, repeats: int = 5) -> None:
+    """Plan-level Study.flatten vs eager flatten_star (parity-checked)."""
+    from benchmarks import flattening_bench
+
+    for r in flattening_bench.run_plan_vs_eager(n_patients=n_patients,
+                                                repeats=repeats):
+        _emit(
+            f"flatten_plan.{r['database']}",
+            r["plan_s"] * 1e6,
+            f"eager_us={r['eager_s'] * 1e6:.1f} "
+            f"plan/eager={r['plan_over_eager']} "
+            f"cap={r['plan_capacity']}/{r['eager_capacity']} "
+            f"parity={r['parity']}",
+        )
+        if r["parity"] != "pass":
+            raise SystemExit(
+                f"flatten_plan.{r['database']}: plan/eager row-set parity "
+                "FAILED — the plan path diverged from eager flatten_star")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -103,10 +123,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     if args.smoke:
         bench_table1()
+        bench_flatten_plan(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
         return
     bench_table1()
     bench_flattening()
+    bench_flatten_plan()
     bench_fig3()
     bench_study()
     bench_roofline()

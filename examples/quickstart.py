@@ -1,11 +1,15 @@
 """Quickstart: the SCALPEL3 pipeline in ~40 lines (paper Supplementary A).
 
-  synthetic SNDS -> flatten (denormalize once) -> lazy Study plan
-  (extraction + cohort algebra fused into ONE compiled pass) -> stats report.
+  synthetic SNDS -> ONE lazy Study plan covering flattening (denormalization
+  joins), extraction and cohort algebra, compiled into a single XLA program
+  -> stats report.
 
-The ``Study`` builder defers everything: extractors share a single scan over
-the flat table, mask steps fuse, each output materializes exactly once, and
-every executed plan node lands in the ``OperationLog`` automatically.
+The ``Study`` builder defers everything: ``flatten`` puts the star-schema
+joins into the plan (capacities sized host-side from table statistics),
+extractors chain onto the flat node and share a single projection, mask steps
+fuse, each output materializes exactly once, and every executed plan node —
+including per-join FlatteningStats — lands in the ``OperationLog``
+automatically.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,7 +18,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import DCIR_SCHEMA, drug_dispenses, flatten_star, medical_acts_dcir, stats
+from repro.core import DCIR_SCHEMA, drug_dispenses, medical_acts_dcir, stats
 from repro.data.synthetic import SyntheticConfig, generate_dcir
 from repro.study import Study, flow_rows_from_log
 
@@ -23,14 +27,9 @@ cfg = SyntheticConfig(n_patients=1_000, seed=0)
 dcir = generate_dcir(cfg)
 print(f"normalized DCIR: {int(dcir['ER_PRS'].count)} cash-flow rows")
 
-# 2. SCALPEL-Flattening: denormalize once, monitored
-flat, audit = flatten_star(DCIR_SCHEMA, dcir)
-for stage in audit:
-    stage.assert_no_loss()
-print(f"flat table: {int(flat.count)} rows x {len(flat.column_names)} cols")
-
-# 3+4. SCALPEL-Extraction + Analysis as ONE lazy study plan
+# 2-4. SCALPEL-Flattening + Extraction + Analysis as ONE lazy study plan
 study = (Study(n_patients=cfg.n_patients)
+         .flatten(DCIR_SCHEMA)                      # joins in the plan IR
          .extract(drug_dispenses(), name="drug_purchases")
          .extract(medical_acts_dcir(codes=list(range(30))), name="acts")
          .patients("IR_BEN")
@@ -39,11 +38,19 @@ study = (Study(n_patients=cfg.n_patients)
          .cohort("final", "drugged & base - acts")
          .flow("base", "drugged", "final"))
 
-ops = study.optimized_plan().count_ops()
-print(f"\noptimized plan: {ops.get('scan', 0)} scan(s) over DCIR+IR_BEN, "
-      f"{ops.get('fused_mask', 0)} fused masks, {ops.get('compact', 0)} compactions")
+ops = study.optimized_plan(tables=dict(dcir)).count_ops()
+print(f"\noptimized plan: {ops.get('scan_star', 0)} star-table scans, "
+      f"{ops.get('lookup_join', 0)} joins, "
+      f"{ops.get('fused_mask', 0)} fused masks, "
+      f"{ops.get('compact', 0)} compactions")
 
-res = study.run({"DCIR": flat, "IR_BEN": dcir["IR_BEN"]})
+res = study.run(dict(dcir))                         # raw star tables in
+res.assert_no_loss()                                # the paper's join audit
+flat = res.events["DCIR"]
+print(f"flat table: {int(flat.count)} rows x {len(flat.column_names)} cols")
+for i, d in sorted(res.flatten_stats.items()):
+    print(f"  {d['stage']}: rows {d['rows_in']}->{d['rows_out']} "
+          f"matched={d['matched']} overflow={d['overflow']}")
 final = res.cohorts["final"]
 print(f"\nfinal cohort: {final.subject_count()} subjects")
 print(f"describe(): {final.describe()}")

@@ -182,6 +182,20 @@ class ColumnarTable:
         valid = self.valid[idx]
         return ColumnarTable(cols, valid, self.count)
 
+    def shrink_to(self, capacity: int) -> "ColumnarTable":
+        """Truncate to a smaller static capacity (inverse of ``pad_to``).
+
+        Meant for already-compacted tables (valid rows at the front): valid
+        rows beyond ``capacity`` are dropped, so callers size ``capacity``
+        from the row count and audit the loss (see the ``slice_time`` node's
+        overflow statistic).  Capacities >= the current one are a no-op.
+        """
+        if capacity >= self.capacity:
+            return self
+        cols = {k: v[:capacity] for k, v in self.columns.items()}
+        valid = self.valid[:capacity]
+        return ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+
     def pad_to(self, capacity: int) -> "ColumnarTable":
         if capacity < self.capacity:
             raise ValueError("pad_to cannot shrink a table")

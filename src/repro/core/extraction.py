@@ -83,12 +83,16 @@ class Extractor:
         needed += [c for c in self.distinct if c not in needed]
         return tuple(sorted(set(needed)))
 
-    def contribute(self, b, compact: bool = True) -> int:
+    def contribute(self, b, compact: bool = True,
+                   base: Optional[int] = None) -> int:
         """Append this extractor's steps 1-3 to a ``PlanBuilder``; returns the
         output node id.  Scans hash-cons, so every extractor over one source
         shares the scan node, and the optimizer then merges projections and
-        fuses the mask steps (``repro.study.optimizer``)."""
-        t = b.select(b.scan(self.source), self.projection())
+        fuses the mask steps (``repro.study.optimizer``).  ``base`` chains
+        the steps onto an existing plan node (e.g. a ``Study.flatten``
+        output) instead of a fresh env scan."""
+        t = b.select(base if base is not None else b.scan(self.source),
+                     self.projection())
         t = b.drop_nulls(t, self.null_cols or (self.value_col,))
         if self.codes is not None:
             t = b.value_filter(t, self.value_col, self.codes)

@@ -21,14 +21,13 @@ TPU adaptation (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.columnar import ColumnarTable, NULL_FLOAT, NULL_INT
+from repro.core.columnar import ColumnarTable, NULL_FLOAT, NULL_INT, is_null
 from repro.core.schema import JoinEdge, StarSchema
 
 __all__ = [
@@ -37,6 +36,8 @@ __all__ = [
     "flatten_star",
     "flatten_sliced",
     "FlatteningStats",
+    "STAT_FIELDS",
+    "stats_from_dict",
     "hash_partition",
     "exchange",
     "distributed_flatten",
@@ -62,15 +63,27 @@ class FlatteningStats:
     stage: str
     rows_in: jax.Array
     rows_out: jax.Array
-    matched: jax.Array      # left rows that found >=1 right match
+    matched: jax.Array      # left rows that found >=1 (non-null) right match
     overflow: jax.Array     # rows dropped because a static capacity was hit
     key_sum_in: jax.Array
     key_sum_out: jax.Array
+    null_keys: jax.Array = None  # key-is-NULL rows excluded from matching
 
     def assert_no_loss(self):
         """Host-side check: every input row survived (paper's no-loss audit)."""
         if int(self.overflow) != 0:
             raise AssertionError(f"stage {self.stage}: {int(self.overflow)} rows overflowed")
+
+
+# Field order of the per-node stats dicts the plan executor emits; mirrors the
+# FlatteningStats attributes (minus ``stage``, carried by the node label).
+STAT_FIELDS = ("rows_in", "rows_out", "matched", "overflow", "null_keys",
+               "key_sum_in", "key_sum_out")
+
+
+def stats_from_dict(stage: str, d: Mapping[str, jax.Array]) -> FlatteningStats:
+    """Rehydrate a FlatteningStats from an executor stats dict."""
+    return FlatteningStats(stage=stage, **{k: d[k] for k in STAT_FIELDS})
 
 
 # ---------------------------------------------------------------------------
@@ -89,10 +102,18 @@ def lookup_join(
     located by ``searchsorted``, right attributes gathered, misses filled with
     null sentinels — exactly a hash-lookup join expressed in sorted-columnar
     form (TPUs vastly prefer sorted gathers over scattered hash probes).
+
+    SQL left-join semantics for NULLs: a NULL key never matches anything, so
+    null-key right rows are masked out up front (they sink with the invalid
+    rows) and null-key left rows miss by construction; both are counted in
+    ``FlatteningStats.null_keys``.
     """
+    r_key_null = is_null(right.columns[right_key]) & right.valid
+    right = right.filter(~is_null(right.columns[right_key]))
     r = right.sort_by([right_key])
     cap_r = r.capacity
     lk = left.columns[left_key]
+    l_key_null = is_null(lk) & left.valid
     if cap_r == 0:  # empty right table: every left row misses
         pos = jnp.zeros(left.capacity, jnp.int32)
         posc = pos
@@ -103,7 +124,8 @@ def lookup_join(
                        _maxval(r.columns[right_key].dtype))
         pos = jnp.searchsorted(rk, lk, side="left")
         posc = jnp.clip(pos, 0, cap_r - 1)
-        found = (pos < cap_r) & (rk[posc] == lk) & r.valid[posc] & left.valid
+        found = ((pos < cap_r) & (rk[posc] == lk) & r.valid[posc]
+                 & left.valid & ~is_null(lk))
 
     new_cols = dict(left.columns)
     for name in r.column_names:
@@ -125,6 +147,7 @@ def lookup_join(
         overflow=jnp.int32(0),
         key_sum_in=jnp.where(left.valid, key_col, 0).sum(dtype=jnp.uint32),
         key_sum_out=jnp.where(out.valid, key_col, 0).sum(dtype=jnp.uint32),
+        null_keys=(l_key_null.sum() + r_key_null.sum()).astype(jnp.int32),
     )
     return out, stats
 
@@ -151,16 +174,21 @@ def expand_join(
     flags capacity overruns (the audit the paper computes per stage).
     """
     L = left.capacity
+    r_key_null = is_null(right.columns[right_key]) & right.valid
+    right = right.filter(~is_null(right.columns[right_key]))
     if right.capacity == 0:
         right = right.pad_to(1)
     r = right.sort_by([right_key])
     cap_r = r.capacity
     rk = jnp.where(r.valid, r.columns[right_key], _maxval(r.columns[right_key].dtype))
     lk = left.columns[left_key]
+    l_key_null = is_null(lk) & left.valid
 
     start = jnp.searchsorted(rk, lk, side="left")
     stop = jnp.searchsorted(rk, lk, side="right")
-    cnt = jnp.where(left.valid, stop - start, 0)
+    # NULL keys never match (SQL left-join semantics); null-key left rows
+    # still emit one row with null right attributes.
+    cnt = jnp.where(left.valid & ~is_null(lk), stop - start, 0)
     out_cnt = jnp.where(left.valid, jnp.maximum(cnt, 1), 0)
     offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(out_cnt).astype(jnp.int32)])
     total = offs[-1]
@@ -193,6 +221,7 @@ def expand_join(
         overflow=jnp.maximum(total - out_capacity, 0).astype(jnp.int32),
         key_sum_in=jnp.where(left.valid, key_u32, 0).sum(dtype=jnp.uint32),
         key_sum_out=jnp.where(out_valid, new_cols[left_key].astype(jnp.uint32), 0).sum(dtype=jnp.uint32),
+        null_keys=(l_key_null.sum() + r_key_null.sum()).astype(jnp.int32),
     )
     return out, stats
 
@@ -200,6 +229,17 @@ def expand_join(
 # ---------------------------------------------------------------------------
 # Whole-star flattening
 # ---------------------------------------------------------------------------
+def _run_flatten_plan(plan, out_id, tables):
+    """Execute a flattening plan body (traceable) and rehydrate its stats."""
+    from repro.study.executor import run_plan_body
+
+    env = {s: tables[s] for s in plan.sources()}
+    vals, _, stats = run_plan_body(plan, env, 0, "xla")
+    stats_list = [stats_from_dict(plan.nodes[i].label(), stats[i])
+                  for i in sorted(stats)]
+    return vals[out_id], stats_list
+
+
 def flatten_star(
     schema: StarSchema,
     tables: Mapping[str, ColumnarTable],
@@ -208,25 +248,22 @@ def flatten_star(
 ) -> Tuple[ColumnarTable, List[FlatteningStats]]:
     """Denormalize one sub-database: sequential joins from the central table.
 
+    Thin eager wrapper over the plan path (mirrors ``Extractor.__call__``):
+    builds the ``scan_star``/join node chain and evaluates it immediately via
+    the plan executor's traced body, so it stays jit-able from the outside.
     ``expand_capacity`` bounds each 1:N expansion; when omitted it is derived
-    host-side from the child-table capacities (the Spark analogue is the
-    driver sizing shuffle partitions from table statistics).
+    from the static table capacities at trace time.  Studies should instead
+    use ``Study.flatten``, whose optimizer pass derives exact capacities from
+    table statistics host-side.
     """
-    flat = tables[schema.central.name]
-    stats: List[FlatteningStats] = []
-    for edge in schema.joins:
-        right = tables[edge.right]
-        if edge.one_to_many:
-            cap = expand_capacity
-            if cap is None:
-                # worst case: every existing flat row matches avg child rows;
-                # slack absorbs skew. Static: derived from capacities only.
-                cap = int((flat.capacity + right.capacity) * expand_slack)
-            flat, st = expand_join(flat, right, edge.left_key, edge.right_key, cap)
-        else:
-            flat, st = lookup_join(flat, right, edge.left_key, edge.right_key)
-        stats.append(st)
-    return flat, stats
+    from repro.study.api import contribute_flatten
+    from repro.study.plan import PlanBuilder
+
+    b = PlanBuilder()
+    out = contribute_flatten(b, schema, expand_capacity=expand_capacity,
+                             expand_slack=expand_slack)
+    b.set_output("flat", out)
+    return _run_flatten_plan(b.build(), out, tables)
 
 
 def flatten_sliced(
@@ -240,20 +277,23 @@ def flatten_sliced(
 ) -> Tuple[ColumnarTable, List[FlatteningStats]]:
     """Temporal slicing (paper §3.3): divide the central table by time unit,
     flatten each slice, and append the results — bounds the working set of
-    each big join exactly like SCALPEL-Flattening's year/month slicing."""
-    central = tables[schema.central.name]
-    edges = np.linspace(t0, t1 + 1, n_slices + 1).astype(np.int32)
-    parts: List[ColumnarTable] = []
-    stats: List[FlatteningStats] = []
-    for i in range(n_slices):
-        tcol = central.columns[time_column]
-        in_slice = (tcol >= int(edges[i])) & (tcol < int(edges[i + 1]))
-        sliced = dict(tables)
-        sliced[schema.central.name] = central.filter(in_slice).compact()
-        flat_i, st = flatten_star(schema, sliced, **kw)
-        parts.append(flat_i)
-        stats.extend(st)
-    return ColumnarTable.concat(parts), stats
+    each big join exactly like SCALPEL-Flattening's year/month slicing.
+
+    Host-driven (tables must be concrete, not tracers): the capacity planner
+    bounds each slice by its actual row count, so the appended output
+    allocates ~sum-of-slice-rows instead of ``n_slices`` copies of the full
+    central capacity.
+    """
+    from repro.study.api import contribute_flatten_sliced
+    from repro.study.optimizer import plan_capacities
+    from repro.study.plan import PlanBuilder
+
+    b = PlanBuilder()
+    out = contribute_flatten_sliced(b, schema, time_column, n_slices, t0, t1,
+                                    **kw)
+    b.set_output("flat", out)
+    plan = plan_capacities(b.build(), tables)
+    return _run_flatten_plan(plan, plan.output_ids["flat"], tables)
 
 
 # ---------------------------------------------------------------------------
@@ -340,68 +380,30 @@ def distributed_flatten(
 
     Returns ``(flat_table, overflow_total)``: the flat table is globally
     row-sharded over ``axis_name`` (patient-partitioned), overflow is a
-    replicated scalar the caller asserts to be zero.
+    scalar the caller asserts to be zero.
+
+    Thin wrapper over the plan path: builds the exchange-aware flatten plan
+    (``contribute_flatten(exchange=True)`` emits the Spark physical plan —
+    exchange both sides of every join onto the join key, then one final
+    exchange onto ``patient_id``), lets the optimizer's partitioning-awareness
+    pass prune exchanges whose input is already hash-partitioned on the key
+    (Spark's EnsureRequirements, formerly a hand-rolled ``flat_pkey`` loop
+    here), and executes under ``shard_map`` via ``execute_plan_sharded``.
     """
-    from jax.sharding import PartitionSpec as P
+    from repro.distributed.pipeline import execute_plan_sharded
+    from repro.study.api import contribute_flatten
+    from repro.study.optimizer import dce, prune_exchanges
+    from repro.study.plan import PlanBuilder
 
     n = mesh.shape[axis_name]
-
-    # Decompose tables into (columns, valid) — shard_map shards raw arrays;
-    # per-shard counts are recomputed locally (a global `count` scalar cannot
-    # shard over rows).  Capacities are padded to a multiple of the shard
-    # count (pad rows are invalid).
-    raw = {}
-    for name, t in tables.items():
-        cap = -(-t.capacity // n) * n
-        tp = t.pad_to(cap) if cap != t.capacity else t
-        raw[name] = ({k: v for k, v in tp.columns.items()}, tp.valid)
-
-    def plan(raw_tbls):
-        overflow = jnp.int32(0)
-        local: Dict[str, ColumnarTable] = {}
-        for name, (cols, valid) in raw_tbls.items():
-            local[name] = ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
-
-        # Spark physical plan: exchange both sides of every join onto the join
-        # key, local join, repeat — then one final exchange onto patient_id.
-        # Partitioning-aware (Spark's EnsureRequirements): an exchange is
-        # skipped when the table is already hash-partitioned on the key —
-        # re-exchanging on the same key would funnel every row to one
-        # destination.
-        flat = local[schema.central.name]
-        flat_pkey = None  # current partitioning key of `flat` (None = arbitrary)
-        for edge in schema.joins:
-            right = local[edge.right]
-            if flat_pkey != edge.left_key:
-                per_l = max(min_per_dest, int(flat.capacity * slack / n))
-                flat, ov1 = exchange(flat, edge.left_key, axis_name, n, per_l)
-                overflow = overflow + ov1
-                flat_pkey = edge.left_key
-            per_r = max(min_per_dest, int(right.capacity * slack / n))
-            right, ov2 = exchange(right, edge.right_key, axis_name, n, per_r)
-            overflow = overflow + ov2
-            if edge.one_to_many:
-                cap = expand_capacity or int((flat.capacity + right.capacity) * 1.5)
-                flat, st = expand_join(flat, right, edge.left_key, edge.right_key, cap)
-            else:
-                flat, st = lookup_join(flat, right, edge.left_key, edge.right_key)
-            overflow = overflow + st.overflow
-
-        if schema.patient_key in flat.columns and flat_pkey != schema.patient_key:
-            flat, ov = exchange(
-                flat, schema.patient_key, axis_name, n,
-                max(min_per_dest, int(flat.capacity * slack / n)),
-            )
-            overflow = overflow + ov
-        return (dict(flat.columns), flat.valid), jax.lax.psum(overflow, axis_name)
-
-    shard_fn = jax.shard_map(
-        plan,
-        mesh=mesh,
-        in_specs=(P(axis_name),),   # pytree prefix: every table row-sharded
-        out_specs=(P(axis_name), P()),
-        check_vma=False,
-    )
-    (cols, valid), overflow = shard_fn(raw)
-    flat = ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+    b = PlanBuilder()
+    out = contribute_flatten(b, schema, expand_capacity=expand_capacity,
+                             exchange=True, exchange_slack=slack,
+                             min_per_dest=min_per_dest)
+    b.set_output("flat", out)
+    plan = dce(prune_exchanges(b.build(), n_shards=n))
+    vals, _, stats = execute_plan_sharded(plan, tables, 0, mesh,
+                                          axis_name=axis_name)
+    flat = vals[plan.output_ids["flat"]]
+    overflow = jnp.int32(sum(s["overflow"] for s in stats.values()))
     return flat, overflow

@@ -70,6 +70,15 @@ class StarSchema:
     def all_tables(self) -> List[TableSchema]:
         return [self.central, *self.dims]
 
+    def flat_columns(self) -> Tuple[str, ...]:
+        """Column set of the denormalized flat table: the central columns plus
+        every joined table's columns minus its join key (which the joins fold
+        into the left side)."""
+        cols = set(self.central.columns)
+        for e in self.joins:
+            cols |= set(self.table(e.right).columns) - {e.right_key}
+        return tuple(sorted(cols))
+
 
 _i32 = np.dtype(np.int32)
 _f32 = np.dtype(np.float32)

@@ -133,8 +133,10 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
 
     Table outputs come back shard-concatenated (each shard's block compacted
     locally, global ``count`` from the psum); they remain valid-masked tables
-    like every other plan output.  Returns ``(vals, counts)`` shaped like the
-    local executor's so ``Study.run`` shares its realization path.
+    like every other plan output.  Returns ``(vals, counts, stats)`` shaped
+    like the local executor's so ``Study.run`` shares its realization path —
+    ``stats`` holds per-join FlatteningStats as host ints (psum over shards:
+    local row counts / overflows / key checksums sum to the global ones).
     """
     import numpy as np
     from repro.core.columnar import ColumnarTable
@@ -175,28 +177,31 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
             local = {s: ColumnarTable(c, valids[s],
                                       valids[s].sum().astype(jnp.int32))
                      for s, c in cols.items()}
-            vals, counts = run_plan_body(plan, local, n_patients, engine)
+            vals, counts, stats = run_plan_body(
+                plan, local, n_patients, engine, axis_name=axis_name,
+                n_shards=n)
             t_out = {i: (dict(vals[i].columns), vals[i].valid)
                      for i in ev_ids}
             b_out = {i: jax.lax.psum(vals[i], axis_name) for i in cohort_ids}
             # local counts sum to global counts; stacked -> one psum+transfer
             ids = tuple(sorted(counts))
             c_out = jax.lax.psum(jnp.stack([counts[i] for i in ids]), axis_name)
-            return t_out, b_out, c_out
+            s_out = jax.lax.psum(stats, axis_name) if stats else {}
+            return t_out, b_out, c_out, s_out
 
         fn = jax.jit(compat_shard_map(
             body, mesh,
             in_specs=(P(axis_name), P(axis_name)),
-            out_specs=(P(axis_name), P(), P()),
+            out_specs=(P(axis_name), P(), P(), P()),
         ))
         _PLAN_CACHE[key] = fn
 
-    t_out, b_out, counts_vec = fn(cols_in, valid_in)
-    from repro.study.executor import traced_ids
+    t_out, b_out, counts_vec, s_out = fn(cols_in, valid_in)
+    from repro.study.executor import _host_stats, traced_ids
 
     counts = {i: int(c) for i, c in
               zip(traced_ids(plan), np.asarray(counts_vec))}
     vals = {i: ColumnarTable(c, v, jnp.int32(counts[i]))
             for i, (c, v) in t_out.items()}
     vals.update(b_out)
-    return vals, counts
+    return vals, counts, _host_stats(s_out)

@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams (~0.5); accept both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK = 512
 _BIG = 2_000_000_000
 
@@ -111,7 +114,7 @@ def segmented_scan(flags: jax.Array, vals: jax.Array, block: int = DEFAULT_BLOCK
         ],
         scratch_shapes=[pltpu.SMEM((4,), jnp.int32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),  # sequential: carry dependency
         ),
     )(flags.astype(jnp.int8), vals)

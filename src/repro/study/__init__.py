@@ -7,14 +7,20 @@ defers compaction; ``execute`` (executor) jit-compiles the plan once per
 """
 from repro.study.plan import Node, Plan, PlanBuilder
 from repro.study.optimizer import (
-    optimize, merge_projections, fuse_masks, defer_compaction, dce,
+    optimize, merge_projections, fuse_masks, defer_compaction,
+    plan_capacities, prune_exchanges, dce,
 )
 from repro.study.executor import execute, TRANSFORMS, jit_cache_info, clear_jit_cache
-from repro.study.api import Study, StudyResult, flow_rows_from_log
+from repro.study.api import (
+    Study, StudyResult, contribute_flatten, contribute_flatten_sliced,
+    flow_rows_from_log,
+)
 
 __all__ = [
     "Node", "Plan", "PlanBuilder",
-    "optimize", "merge_projections", "fuse_masks", "defer_compaction", "dce",
+    "optimize", "merge_projections", "fuse_masks", "defer_compaction",
+    "plan_capacities", "prune_exchanges", "dce",
     "execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache",
-    "Study", "StudyResult", "flow_rows_from_log",
+    "Study", "StudyResult", "contribute_flatten", "contribute_flatten_sliced",
+    "flow_rows_from_log",
 ]

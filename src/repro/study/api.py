@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.cohort import Cohort, CohortCollection, CohortFlow
 from repro.core.columnar import ColumnarTable
 from repro.core.metadata import OperationLog
@@ -32,9 +34,76 @@ from repro.study import executor as _executor
 from repro.study import optimizer as _optimizer
 from repro.study.plan import COHORT_OPS, Plan, PlanBuilder, TABLE_OPS
 
-__all__ = ["Study", "StudyResult", "flow_rows_from_log"]
+__all__ = ["Study", "StudyResult", "contribute_flatten",
+           "contribute_flatten_sliced", "flow_rows_from_log"]
 
 _FLOW_OUT = "__flow__"
+
+
+def contribute_flatten(b: PlanBuilder, schema, central: Optional[int] = None,
+                       expand_capacity: Optional[int] = None,
+                       expand_slack: float = 1.5, exchange: bool = False,
+                       exchange_slack: float = 2.0, min_per_dest: int = 64,
+                       partitioned_on: Optional[str] = None) -> int:
+    """Append one sub-database's flattening to ``b``; returns the flat node.
+
+    The join chain mirrors ``StarSchema.joins`` (lookup for N:1 dimension
+    tables, expand for 1:N children).  ``exchange=True`` emits the Spark
+    physical plan for mesh execution — exchange both sides of every join
+    onto the join key, then one final exchange onto ``patient_key`` so the
+    output is patient-partitioned.  The left side's partitioning is tracked
+    while building, so a same-key exchange is never emitted in the first
+    place (re-exchanging an already-partitioned shard would funnel every
+    local row into one destination bucket — this must hold even for raw,
+    unoptimized plans); the optimizer's ``prune_exchanges`` pass additionally
+    drops exchanges made redundant by rewrites, and all of them off-mesh.
+    ``central`` overrides the central-table node (e.g. a ``slice_time`` of
+    it), with ``partitioned_on`` describing *its* partitioning.
+    """
+    t = central if central is not None else b.scan_star(
+        schema.central.name, star=schema.name, partitioned_on=partitioned_on)
+    pkey = partitioned_on
+    for edge in schema.joins:
+        r = b.scan_star(edge.right, star=schema.name)
+        if exchange:
+            if pkey != edge.left_key:
+                t = b.exchange(t, edge.left_key, slack=exchange_slack,
+                               min_per_dest=min_per_dest)
+                pkey = edge.left_key
+            r = b.exchange(r, edge.right_key, slack=exchange_slack,
+                           min_per_dest=min_per_dest)
+        if edge.one_to_many:
+            t = b.expand_join(t, r, edge.left_key, edge.right_key,
+                              capacity=expand_capacity, slack=expand_slack)
+        else:
+            t = b.lookup_join(t, r, edge.left_key, edge.right_key)
+    if exchange and pkey != schema.patient_key \
+            and schema.patient_key in schema.flat_columns():
+        t = b.exchange(t, schema.patient_key, slack=exchange_slack,
+                       min_per_dest=min_per_dest)
+    return t
+
+
+def contribute_flatten_sliced(b: PlanBuilder, schema, time_column: str,
+                              n_slices: int, t0: int, t1: int,
+                              name: str = "sliced_flatten",
+                              partitioned_on: Optional[str] = None,
+                              **kw) -> int:
+    """Temporal slicing (paper §3.3) as plan nodes: one ``slice_time`` +
+    join chain per slice, concatenated.  Slice capacities stay unset here —
+    the optimizer's capacity planner bounds each one by the slice's actual
+    row count (``plan_capacities``), which is what keeps the concatenated
+    output at ~sum-of-slice-rows instead of ``n_slices`` full copies."""
+    edges = np.linspace(int(t0), int(t1) + 1,
+                        int(n_slices) + 1).astype(np.int32)
+    parts = []
+    for i in range(int(n_slices)):
+        t = b.scan_star(schema.central.name, star=schema.name,
+                        partitioned_on=partitioned_on)
+        t = b.slice_time(t, time_column, int(edges[i]), int(edges[i + 1]))
+        parts.append(contribute_flatten(b, schema, central=t,
+                                        partitioned_on=partitioned_on, **kw))
+    return b.concat(parts, name=name)
 
 
 @dataclasses.dataclass
@@ -48,6 +117,17 @@ class StudyResult:
     log: OperationLog                         # automatic provenance
     plan: Plan                                # the plan that actually ran
     feature_checks: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
+    flatten_stats: Dict[int, Dict[str, int]] = dataclasses.field(default_factory=dict)
+    # ^ per-join FlatteningStats (host ints, keyed by plan node id; each dict
+    #   carries a "stage" label) — also recorded in ``log`` automatically
+
+    def assert_no_loss(self) -> None:
+        """The paper's flattening audit: no join/exchange overflowed."""
+        for i, d in self.flatten_stats.items():
+            if d.get("overflow", 0):
+                raise AssertionError(
+                    f"plan node #{i} ({d.get('stage')}): "
+                    f"{d['overflow']} rows overflowed")
 
     def collection(self) -> CohortCollection:
         return CohortCollection(dict(self.cohorts), metadata=self.log)
@@ -66,7 +146,7 @@ class Study:
         self._sources: Dict[str, ColumnarTable] = {}
         self._flow_names: Optional[List[str]] = None
         self._feature_names: List[str] = []
-        self._opt_cache: Optional[Tuple[Plan, Plan]] = None  # (raw, optimized)
+        self._opt_cache: Optional[Tuple[Tuple, Plan]] = None  # (key, optimized)
 
     # -- builder steps -------------------------------------------------------
     def _register(self, name: str, nid: int, kind: str) -> "Study":
@@ -81,10 +161,53 @@ class Study:
         self._sources[name] = table
         return self
 
+    def flatten(self, schema, name: Optional[str] = None,
+                time_slices: Optional[int] = None,
+                time_column: Optional[str] = None, t0: Optional[int] = None,
+                t1: Optional[int] = None, expand_capacity: Optional[int] = None,
+                expand_slack: float = 1.5, exchange: bool = True,
+                partitioned_on: Optional[str] = None) -> "Study":
+        """SCALPEL-Flattening as plan nodes: the star schema's
+        denormalization joins enter the same Plan IR as extraction, so one
+        ``optimize()`` + executor pass jit-compiles raw star tables all the
+        way to features.  The flat table registers under ``name`` (default:
+        the schema name, e.g. ``"DCIR"``), and later ``extract()`` calls
+        whose extractor ``source`` matches chain onto it instead of scanning
+        the run-time env — ``run()`` then takes the *normalized* star tables.
+
+        ``time_slices`` (with ``time_column``/``t0``/``t1``) splits the
+        central table into temporal slices flattened independently and
+        concatenated, each with a bounded capacity set by the optimizer's
+        capacity planner.  ``exchange`` keeps the plan mesh-ready (exchange
+        nodes are pruned off-mesh and are the identity when unpruned).
+        """
+        b = self._b
+        if time_slices:
+            if time_column is None or t0 is None or t1 is None:
+                raise ValueError("time_slices needs time_column, t0 and t1")
+            nid = contribute_flatten_sliced(
+                b, schema, time_column, time_slices, t0, t1,
+                name=name or schema.name, partitioned_on=partitioned_on,
+                expand_capacity=expand_capacity, expand_slack=expand_slack,
+                exchange=exchange)
+        else:
+            nid = contribute_flatten(
+                b, schema, expand_capacity=expand_capacity,
+                expand_slack=expand_slack, exchange=exchange,
+                partitioned_on=partitioned_on)
+        return self._register(name or schema.name, nid, "table")
+
     def extract(self, extractor, name: Optional[str] = None,
                 compact: bool = True) -> "Study":
-        """Append a declarative ``Extractor``'s steps to the plan."""
-        nid = extractor.contribute(self._b, compact=compact)
+        """Append a declarative ``Extractor``'s steps to the plan.  When the
+        extractor's ``source`` names a table built earlier in this study
+        (e.g. by ``flatten``), the steps chain onto that node; otherwise they
+        scan the run-time env."""
+        base = None
+        if (extractor.source in self._names
+                and self._kinds.get(extractor.source) == "table"):
+            base = self._names[extractor.source]
+        nid = extractor.contribute(self._b, compact=compact, base=base)
         return self._register(name or extractor.name, nid, "events")
 
     def patients(self, source: str = "IR_BEN",
@@ -178,13 +301,28 @@ class Study:
         """The raw (unoptimized) plan built so far."""
         return self._b.build()
 
-    def optimized_plan(self) -> Plan:
+    def optimized_plan(self, tables: Optional[Dict[str, ColumnarTable]] = None,
+                       n_shards: int = 1) -> Plan:
+        """Optimize the built plan.  ``tables`` (concrete run-time tables)
+        lets the capacity planner size join outputs from table statistics —
+        the planned capacities depend on table *content* (join-key
+        distributions), which no shape fingerprint can capture, so that path
+        re-plans on every call (reusing a stale exact capacity on
+        differently-distributed data would silently truncate rows); the
+        executor's jit cache still dedupes compilation whenever the planned
+        capacities come out unchanged.  Plans with nothing to capacity-plan
+        (no capacity-less expand_join/slice_time node) are content-independent
+        and keep the cached path."""
         raw = self.plan()
-        if self._opt_cache is not None and self._opt_cache[0] is not None \
-                and self._opt_cache[0].key() == raw.key():
+        needs_stats = any(n.op in ("expand_join", "slice_time")
+                          and n.get("capacity") is None for n in raw.nodes)
+        if tables and needs_stats:
+            return _optimizer.optimize(raw, tables=tables, n_shards=n_shards)
+        key = (raw.key(), n_shards)
+        if self._opt_cache is not None and self._opt_cache[0] == key:
             return self._opt_cache[1]
-        opt = _optimizer.optimize(raw)
-        self._opt_cache = (raw, opt)
+        opt = _optimizer.optimize(raw, n_shards=n_shards)
+        self._opt_cache = (key, opt)
         return opt
 
     # -- execution -----------------------------------------------------------
@@ -196,19 +334,26 @@ class Study:
         realize cohorts/flow/features, and auto-log provenance."""
         env = dict(self._sources)
         env.update(tables or {})
-        plan = self.optimized_plan() if optimize else self.plan()
+        n_shards = mesh.shape[axis_name] if mesh is not None else 1
+        plan = (self.optimized_plan(tables=env, n_shards=n_shards)
+                if optimize else self.plan())
         log = log if log is not None else OperationLog()
 
+        join_stats: Dict[int, Dict[str, int]] = {}
         if mesh is not None:
             from repro.distributed.pipeline import execute_plan_sharded
 
-            vals, counts = execute_plan_sharded(
+            vals, counts, join_stats = execute_plan_sharded(
                 plan, env, self.n_patients, mesh, axis_name=axis_name,
                 engine=engine)
-            _executor.record_plan(plan, counts, log, engine)
+            _executor.record_plan(plan, counts, log, engine,
+                                  stats=join_stats)
         else:
             vals = _executor.execute(plan, env, n_patients=self.n_patients,
-                                     engine=engine, log=log, jit=jit)
+                                     engine=engine, log=log, jit=jit,
+                                     stats_sink=join_stats)
+        for i, d in join_stats.items():
+            d.setdefault("stage", plan.nodes[i].label())
 
         nodes = plan.nodes
         out_ids = plan.output_ids
@@ -291,7 +436,7 @@ class Study:
 
         return StudyResult(events=events, cohorts=cohorts, flow=flow,
                            features=features, log=log, plan=plan,
-                           feature_checks=checks)
+                           feature_checks=checks, flatten_stats=join_stats)
 
 
 class _Count:

@@ -24,12 +24,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flattening as _fl
 from repro.core import transformers as _tr
 from repro.core.cohort import Bitset
 from repro.core.columnar import ColumnarTable, is_null
 from repro.core.events import make_events
 from repro.core.metadata import OperationLog
-from repro.study.plan import COHORT_OPS, Plan, TABLE_OPS
+from repro.study.plan import COHORT_OPS, Plan, STATS_OPS, TABLE_OPS
 
 __all__ = ["execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache"]
 
@@ -80,15 +81,76 @@ def _compact_table(t: ColumnarTable, engine: str) -> ColumnarTable:
     return ColumnarTable(cols, valid, count.astype(jnp.int32))
 
 
+def _stats_dict(fs) -> Dict[str, jax.Array]:
+    return {k: getattr(fs, k) for k in _fl.STAT_FIELDS}
+
+
+def _key_checksum(t: ColumnarTable, key: str) -> jax.Array:
+    k = t.columns[key].astype(jnp.uint32)
+    return jnp.where(t.valid, k, 0).sum(dtype=jnp.uint32)
+
+
 def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
-               engine: str):
+               engine: str, axis_name: Optional[str] = None,
+               n_shards: int = 1):
     op = node.op
-    if op == "scan":
+    if op in ("scan", "scan_star"):
         src = node.get("source")
         if src not in env:
             raise KeyError(f"plan scans source {src!r} but run() got "
                            f"{sorted(env)}")
         return env[src]
+    if op == "lookup_join":
+        out, fs = _fl.lookup_join(ins[0], ins[1], node.get("left_key"),
+                                  node.get("right_key"),
+                                  prefix=node.get("prefix") or "")
+        return out, _stats_dict(fs)
+    if op == "expand_join":
+        cap = node.get("capacity")
+        if cap is None:
+            # trace-time fallback when the host-side capacity planner did not
+            # run (e.g. optimize=False, or tables unknown at optimize time)
+            cap = int((ins[0].capacity + ins[1].capacity)
+                      * (node.get("slack") or 1.5))
+        out, fs = _fl.expand_join(ins[0], ins[1], node.get("left_key"),
+                                  node.get("right_key"), cap,
+                                  prefix=node.get("prefix") or "")
+        return out, _stats_dict(fs)
+    if op == "exchange":
+        t = ins[0]
+        key = node.get("key")
+        ksum_in = _key_checksum(t, key)
+        zero = jnp.int32(0)
+        if axis_name is None or n_shards <= 1:
+            # off-mesh (or single shard): the shuffle is the identity
+            return t, {"rows_in": t.count, "rows_out": t.count,
+                       "matched": t.count, "overflow": zero,
+                       "null_keys": zero, "key_sum_in": ksum_in,
+                       "key_sum_out": ksum_in}
+        per = node.get("per_dest_capacity")
+        if per is None:
+            per = max(int(node.get("min_per_dest") or 64),
+                      int(t.capacity * (node.get("slack") or 2.0) / n_shards))
+        out, overflow = _fl.exchange(t, key, axis_name, n_shards, per)
+        return out, {"rows_in": t.count, "rows_out": out.count,
+                     "matched": out.count, "overflow": overflow,
+                     "null_keys": zero, "key_sum_in": ksum_in,
+                     "key_sum_out": _key_checksum(out, key)}
+    if op == "slice_time":
+        t = ins[0]
+        col = t.columns[node.get("col")]
+        out = t.filter((col >= node.get("lo")) & (col < node.get("hi")))
+        n_sel = out.count
+        ksum_in = _key_checksum(out, node.get("col"))
+        cap = node.get("capacity")
+        overflow = jnp.int32(0)
+        if cap is not None and cap < t.capacity:
+            out = _compact_table(out, engine).shrink_to(cap)
+            overflow = jnp.maximum(n_sel - cap, 0).astype(jnp.int32)
+        return out, {"rows_in": t.count, "rows_out": out.count,
+                     "matched": n_sel, "overflow": overflow,
+                     "null_keys": jnp.int32(0), "key_sum_in": ksum_in,
+                     "key_sum_out": _key_checksum(out, node.get("col"))}
     if op == "select":
         return ins[0].select(list(node.get("cols")))
     if op == "drop_nulls":
@@ -181,18 +243,26 @@ def keep_ids(plan: Plan) -> Tuple[int, ...]:
 
 
 def run_plan_body(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
-                  engine: str):
+                  engine: str, axis_name: Optional[str] = None,
+                  n_shards: int = 1):
     """Pure traced body: node id -> value for every array-valued node, plus
-    per-node counts.  Reused verbatim by ``distributed.pipeline`` under
-    ``shard_map``."""
+    per-node counts and per-join FlatteningStats dicts.  Reused verbatim by
+    ``distributed.pipeline`` under ``shard_map`` (``axis_name``/``n_shards``
+    make exchange nodes run real collectives there; off-mesh they are the
+    identity)."""
     vals: Dict[int, Any] = {}
     counts: Dict[int, jax.Array] = {}
+    stats: Dict[int, Dict[str, jax.Array]] = {}
     for i in traced_ids(plan):
         node = plan.nodes[i]
         ins = [vals[j] for j in node.inputs]
-        vals[i] = _eval_node(node, ins, env, n_patients, engine)
+        out = _eval_node(node, ins, env, n_patients, engine, axis_name,
+                         n_shards)
+        if node.op in STATS_OPS:
+            out, stats[i] = out
+        vals[i] = out
         counts[i] = _node_count(node, vals[i])
-    return vals, counts
+    return vals, counts, stats
 
 
 def _jitted_runner(plan: Plan, n_patients: int, engine: str) -> Callable:
@@ -202,27 +272,38 @@ def _jitted_runner(plan: Plan, n_patients: int, engine: str) -> Callable:
         keep = keep_ids(plan)
 
         def body(env):
-            vals, counts = run_plan_body(plan, env, n_patients, engine)
+            vals, counts, stats = run_plan_body(plan, env, n_patients, engine)
             # counts leave as ONE stacked vector: a single host transfer for
             # provenance instead of one device sync per node.
             ids = tuple(sorted(counts))
             return ({i: vals[i] for i in keep},
-                    jnp.stack([counts[i] for i in ids]))
+                    jnp.stack([counts[i] for i in ids]),
+                    stats)
 
         fn = jax.jit(body)
         _JIT_CACHE[key] = fn
     return fn
 
 
+def _host_stats(stats) -> Dict[int, Dict[str, int]]:
+    return {i: {k: int(np.asarray(v)) for k, v in d.items()}
+            for i, d in stats.items()}
+
+
 def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
             engine: str = "xla", log: Optional[OperationLog] = None,
-            jit: bool = True) -> Dict[int, Any]:
+            jit: bool = True,
+            stats_sink: Optional[Dict[int, Dict[str, int]]] = None
+            ) -> Dict[int, Any]:
     """Evaluate every array-valued node of ``plan`` over ``tables``.
 
     Returns {node id: value} for the ``keep_ids`` subset — named outputs,
     cohort bitsets and their source event tables (intermediates never leave
     the compiled program).  Host ops (featurize/flow) are the Study layer's
     job — they need realized Cohort objects (see ``api.Study.run``).
+    Per-join ``FlatteningStats`` are recorded into ``log`` automatically and,
+    when ``stats_sink`` is given, copied into it as host ints keyed by node
+    id.
     """
     missing = [s for s in plan.sources() if s not in tables]
     if missing:
@@ -230,24 +311,33 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
                        f"{sorted(tables)}")
     env = {src: tables[src] for src in plan.sources()}
     if jit:
-        vals, counts_vec = _jitted_runner(plan, n_patients, engine)(env)
-        if log is not None:
-            ids = traced_ids(plan)
-            host = np.asarray(counts_vec)
-            record_plan(plan, dict(zip(ids, (int(c) for c in host))), log, engine)
+        vals, counts_vec, stats = _jitted_runner(plan, n_patients, engine)(env)
+        counts = dict(zip(traced_ids(plan),
+                          (int(c) for c in np.asarray(counts_vec))))
     else:
-        vals, counts = run_plan_body(plan, env, n_patients, engine)
+        vals, counts_dev, stats = run_plan_body(plan, env, n_patients, engine)
         vals = {i: vals[i] for i in keep_ids(plan)}
+        counts = {i: int(c) for i, c in counts_dev.items()}
+    if log is not None or stats_sink is not None:
+        # host conversion is one blocking transfer per stat scalar — only
+        # pay it when someone consumes the stats
+        host_stats = _host_stats(stats)
         if log is not None:
-            record_plan(plan, {i: int(c) for i, c in counts.items()}, log, engine)
+            record_plan(plan, counts, log, engine, stats=host_stats)
+        if stats_sink is not None:
+            stats_sink.update(host_stats)
     return vals
 
 
 def record_plan(plan: Plan, counts: Dict[int, int], log: OperationLog,
-                engine: str) -> None:
+                engine: str,
+                stats: Optional[Dict[int, Dict[str, int]]] = None) -> None:
     """One OperationLog entry per executed node — automatic provenance.
-    ``counts`` must already be host ints (see ``execute`` / the sharded path
-    in ``distributed.pipeline``: counts cross as one stacked vector)."""
+    ``counts``/``stats`` must already be host ints (see ``execute`` / the
+    sharded path in ``distributed.pipeline``: counts cross as one stacked
+    vector).  Join/exchange nodes carry their FlatteningStats fields
+    (rows_in/out, matched, overflow, null_keys, key checksums) in the entry
+    params — the paper's no-loss audit, for free on every flattened study."""
     out_names = {i: name for name, i in plan.outputs}
     host_counts = {i: int(c) for i, c in counts.items()}
 
@@ -264,5 +354,7 @@ def record_plan(plan: Plan, counts: Dict[int, int], log: OperationLog,
                       else len(v))
                   for k, v in node.params}
         params["engine"] = engine
+        if stats and i in stats:
+            params.update(stats[i])
         log.record(op=f"plan:{node.op}:{label}", inputs=ins,
                    outputs={label: _N(c)}, params=params)

@@ -1,4 +1,5 @@
-"""Plan rewrites: shared scans, fused masks, deferred compaction, DCE.
+"""Plan rewrites: shared scans, fused masks, deferred compaction, join
+rewrites (capacity planning + partitioning-awareness), DCE.
 
 The passes encode the paper's three columnar properties (§3.4) at the *plan*
 level instead of inside each extractor:
@@ -11,19 +12,37 @@ level instead of inside each extractor:
     mask kernel per extractor branch instead of one per step).
   * ``defer_compaction`` — compaction (the only materialization) is removed
     from plan interiors and appears exactly once per named table output.
+  * ``plan_capacities`` — join capacity planning from table statistics,
+    host-side (the Spark driver sizing shuffle partitions): exact output
+    sizes for ``expand_join``/``slice_time`` nodes, replacing trace-time
+    slack heuristics.
+  * ``prune_exchanges`` — partitioning-awareness (Spark's
+    EnsureRequirements): an exchange whose input is already hash-partitioned
+    on its key is dropped; off-mesh every exchange drops.
   * ``dce`` — drops nodes unreachable from any output (rewrites above strand
     the per-extractor projections).
 
-All passes are pure ``Plan -> Plan`` functions; ``optimize`` is the default
-pipeline used by the executor.
+All passes are pure ``Plan -> Plan`` functions (``plan_capacities`` also
+reads concrete tables); ``optimize`` is the default pipeline used by the
+executor.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
-from repro.study.plan import MASK_OPS, Node, Plan, PlanBuilder
+import numpy as np
 
-__all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction", "dce"]
+from repro.core.columnar import NULL_INT
+from repro.study.plan import JOIN_OPS, MASK_OPS, Node, Plan, PlanBuilder
+
+__all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction",
+           "plan_capacities", "prune_exchanges", "dce"]
+
+# selects hanging off any of these get merged into one union projection
+_MERGE_UPSTREAM = frozenset({
+    "scan", "scan_star", "lookup_join", "expand_join", "exchange",
+    "slice_time", "compact", "concat",
+})
 
 
 def _rebuild(plan: Plan, replace: Dict[int, Node], drop: Optional[set] = None,
@@ -62,12 +81,16 @@ def _rebuild(plan: Plan, replace: Dict[int, Node], drop: Optional[set] = None,
 
 # ---------------------------------------------------------------------------
 def merge_projections(plan: Plan) -> Plan:
-    """One shared scan+projection per source: the union of every consumer's
-    column set.  (Scan nodes themselves already unify by hash-consing; this
-    pass merges the per-extractor ``select`` nodes hanging off them.)"""
+    """One shared projection per source (or per flattened table): the union
+    of every consumer's column set.  (Scan nodes themselves already unify by
+    hash-consing; this pass merges the per-extractor ``select`` nodes hanging
+    off them.)  Selects that are themselves named outputs keep their exact
+    column set — widening them would change the output schema."""
+    out_ids = {i for _, i in plan.outputs}
     selects_by_scan: Dict[int, List[int]] = {}
     for i, n in enumerate(plan.nodes):
-        if n.op == "select" and plan.nodes[n.inputs[0]].op == "scan":
+        if (n.op == "select" and i not in out_ids
+                and plan.nodes[n.inputs[0]].op in _MERGE_UPSTREAM):
             selects_by_scan.setdefault(n.inputs[0], []).append(i)
 
     replace: Dict[int, Node] = {}
@@ -183,6 +206,143 @@ def defer_compaction(plan: Plan) -> Plan:
 
 
 # ---------------------------------------------------------------------------
+# row-preserving ops through which hash partitioning survives (masks don't
+# move rows between shards; joins keep left rows on their shard)
+_PART_PRESERVING = frozenset({
+    "select", "drop_nulls", "value_filter", "fused_mask", "dedupe",
+    "conform_events", "compact", "slice_time", "lookup_join", "expand_join",
+})
+
+
+def prune_exchanges(plan: Plan, n_shards: int = 1) -> Plan:
+    """Partitioning-awareness (Spark's EnsureRequirements, lifted out of
+    ``distributed_flatten``'s hand-rolled ``flat_pkey`` loop): drop an
+    exchange whose input is already hash-partitioned on its key —
+    re-exchanging would funnel every local row to one destination bucket.
+    With ``n_shards <= 1`` every exchange is the identity and all drop.
+    """
+    part: Dict[int, Optional[str]] = {}
+    redirect: Dict[int, int] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op == "scan_star":
+            part[i] = n.get("partitioned_on")
+        elif n.op == "exchange":
+            upstream = part.get(n.inputs[0])
+            if n_shards <= 1 or upstream == n.get("key"):
+                redirect[i] = n.inputs[0]
+                part[i] = upstream
+            else:
+                part[i] = n.get("key")
+        elif n.op in _PART_PRESERVING and n.inputs:
+            part[i] = part.get(n.inputs[0])
+        else:
+            part[i] = None
+    if not redirect:
+        return plan
+    return _rebuild(plan, {}, redirect=redirect)
+
+
+# ---------------------------------------------------------------------------
+def _np_null_mask(a: np.ndarray) -> np.ndarray:
+    """Host-side mirror of ``columnar.is_null`` (same sentinel source)."""
+    if np.issubdtype(a.dtype, np.floating):
+        return np.isnan(a)
+    return a == int(NULL_INT)
+
+
+def _round_up(n: int, quantum: int) -> int:
+    return -(-max(n, 1) // quantum) * quantum
+
+
+def plan_capacities(plan: Plan, tables: Mapping, round_to: int = 64,
+                    ops: Tuple[str, ...] = ("expand_join", "slice_time")
+                    ) -> Plan:
+    """Capacity planning from table statistics, host-side.
+
+    Replaces the ad-hoc ``expand_slack`` guesses: the plan's join-key columns
+    are simulated through the node graph with numpy (the Spark analogue is
+    the driver deriving shuffle sizes from table statistics), giving the
+    *exact* output row count of every ``expand_join`` and ``slice_time``
+    node, which is rounded up to ``round_to`` (jit-cache stability) and
+    written into the node's ``capacity`` param.  ``ops`` restricts which node
+    kinds get a capacity stamped (the simulation always runs in full).
+    Nodes already carrying an explicit capacity, or whose inputs cannot be
+    resolved to concrete tables, are left to the executor's trace-time
+    heuristics.
+    """
+    if not any(n.op in ops and n.get("capacity") is None for n in plan.nodes):
+        return plan  # nothing consumes table statistics — skip the sim
+    needed = set()
+    for n in plan.nodes:
+        if n.op in JOIN_OPS:
+            needed.add(n.get("left_key"))
+            needed.add(n.get("right_key"))
+        elif n.op == "slice_time":
+            needed.add(n.get("col"))
+
+    sim: Dict[int, Optional[Dict[str, np.ndarray]]] = {}
+    replace: Dict[int, Node] = {}
+
+    def _with_capacity(n: Node, cap: int) -> Node:
+        p = dict(n.params)
+        p["capacity"] = int(cap)
+        return Node(n.op, n.inputs, tuple(sorted(p.items())))
+
+    for i, n in enumerate(plan.nodes):
+        if n.op in ("scan", "scan_star"):
+            t = tables.get(n.get("source"))
+            if t is None:
+                sim[i] = None
+                continue
+            valid = np.asarray(t.valid)
+            sim[i] = {c: np.asarray(t.columns[c])[valid]
+                      for c in needed if c in t.columns}
+        elif n.op == "select":
+            up = sim.get(n.inputs[0])
+            sim[i] = (None if up is None else
+                      {c: v for c, v in up.items() if c in n.get("cols")})
+        elif n.op in ("compact", "exchange", "lookup_join"):
+            # row-multiset preserved (lookup_join: N:1 keeps left rows; the
+            # gained right attributes are not join keys in a star schema)
+            sim[i] = sim.get(n.inputs[0])
+        elif n.op == "slice_time":
+            up = sim.get(n.inputs[0])
+            col = n.get("col")
+            if up is None or col not in up:
+                sim[i] = None
+                continue
+            m = (up[col] >= n.get("lo")) & (up[col] < n.get("hi"))
+            if n.op in ops and n.get("capacity") is None:
+                replace[i] = _with_capacity(n, _round_up(int(m.sum()),
+                                                         round_to))
+            sim[i] = {c: v[m] for c, v in up.items()}
+        elif n.op == "expand_join":
+            left = sim.get(n.inputs[0])
+            right = sim.get(n.inputs[1])
+            lk_name, rk_name = n.get("left_key"), n.get("right_key")
+            if left is None or right is None or lk_name not in left \
+                    or rk_name not in right:
+                sim[i] = None
+                continue
+            lk = left[lk_name]
+            rk = right[rk_name]
+            rs = np.sort(rk[~_np_null_mask(rk)])
+            cnt = (np.searchsorted(rs, lk, side="right")
+                   - np.searchsorted(rs, lk, side="left"))
+            cnt[_np_null_mask(lk)] = 0
+            reps = np.maximum(cnt, 1)
+            if n.op in ops and n.get("capacity") is None:
+                replace[i] = _with_capacity(n, _round_up(int(reps.sum()),
+                                                         round_to))
+            sim[i] = {c: np.repeat(v, reps) for c, v in left.items()}
+        else:
+            sim[i] = None
+    if not replace:
+        return plan
+    return _rebuild(plan, replace)
+
+
+# ---------------------------------------------------------------------------
 def dce(plan: Plan) -> Plan:
     """Drop nodes unreachable from any named output."""
     live = set()
@@ -207,9 +367,27 @@ def dce(plan: Plan) -> Plan:
 
 
 # ---------------------------------------------------------------------------
-def optimize(plan: Plan) -> Plan:
-    """Default rewrite pipeline (executor calls this unless told not to)."""
+def optimize(plan: Plan, tables: Optional[Mapping] = None,
+             n_shards: int = 1) -> Plan:
+    """Default rewrite pipeline (executor calls this unless told not to).
+
+    ``tables`` (concrete run-time tables) enables host-side capacity
+    planning; ``n_shards`` informs exchange pruning (off-mesh, every exchange
+    is the identity and drops).
+    """
     plan = merge_projections(plan)
     plan = fuse_masks(plan)
     plan = defer_compaction(plan)
+    plan = prune_exchanges(plan, n_shards=n_shards)
+    if tables:
+        # The planner's exact sizes are GLOBAL row counts.  Under shard_map
+        # each shard would allocate that full size, so sharded expand_joins
+        # keep the executor's per-shard trace-time heuristic (see ROADMAP);
+        # slice_time is still planned there — a global slice count is a sound
+        # per-shard bound (the executor's shrink is a no-op when the local
+        # capacity is already smaller) and slice_time has no trace-time
+        # fallback at all.
+        ops = (("expand_join", "slice_time") if n_shards <= 1
+               else ("slice_time",))
+        plan = plan_capacities(plan, tables, ops=ops)
     return dce(plan)

@@ -18,6 +18,11 @@ Design notes:
 
 Node vocabulary (executor semantics in ``executor.py``):
   scan(source)                      -> flat table from the run-time env
+  scan_star(source, star)           -> raw star-schema table (pre-flattening)
+  lookup_join(l, r, keys)           -> N:1 sorted-lookup left join
+  expand_join(l, r, keys, capacity) -> 1:N offset-expansion left join
+  exchange(t, key)                  -> hash-partition shuffle (identity off-mesh)
+  slice_time(t, col, lo, hi)        -> temporal slice, bounded per-slice capacity
   select(cols)                      -> column projection       (metadata only)
   drop_nulls(cols)                  -> null mask               (mask algebra)
   value_filter(col, codes)          -> whitelist mask          (mask algebra)
@@ -36,13 +41,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
-__all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS"]
+__all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS",
+           "JOIN_OPS", "STATS_OPS"]
 
 # ops whose value is a ColumnarTable
 TABLE_OPS = frozenset({
-    "scan", "select", "drop_nulls", "value_filter", "fused_mask", "dedupe",
-    "conform_events", "compact", "transform", "concat",
+    "scan", "scan_star", "select", "drop_nulls", "value_filter", "fused_mask",
+    "dedupe", "conform_events", "compact", "transform", "concat",
+    "lookup_join", "expand_join", "exchange", "slice_time",
 })
+# flattening joins (left input 0, right input 1)
+JOIN_OPS = frozenset({"lookup_join", "expand_join"})
+# ops that emit FlatteningStats metadata alongside their table value
+STATS_OPS = frozenset({"lookup_join", "expand_join", "exchange", "slice_time"})
 # ops whose value is a packed subject bitset
 COHORT_OPS = frozenset({"cohort_from_events", "cohort_op"})
 # mask-only ops the optimizer may fuse into one vectorized predicate
@@ -114,7 +125,8 @@ class Plan:
         return cons
 
     def sources(self) -> Tuple[str, ...]:
-        return tuple(sorted({n.get("source") for n in self.nodes if n.op == "scan"}))
+        return tuple(sorted({n.get("source") for n in self.nodes
+                             if n.op in ("scan", "scan_star")}))
 
     def render(self) -> str:
         """Human-readable plan dump (debugging / notebooks)."""
@@ -163,6 +175,52 @@ class PlanBuilder:
     # -- table ops -----------------------------------------------------------
     def scan(self, source: str) -> int:
         return self.add("scan", source=source)
+
+    def scan_star(self, source: str, star: Optional[str] = None,
+                  partitioned_on: Optional[str] = None) -> int:
+        """Scan a raw (normalized) star-schema table by name.  ``star`` tags
+        the sub-database for plan introspection; ``partitioned_on`` declares a
+        pre-existing hash partitioning (lets the optimizer prune exchanges)."""
+        return self.add("scan_star", source=source, star=star,
+                        partitioned_on=partitioned_on)
+
+    def lookup_join(self, left: int, right: int, left_key: str,
+                    right_key: str, prefix: str = "") -> int:
+        """N:1 sorted-lookup left join (``core.flattening.lookup_join``)."""
+        return self.add("lookup_join", (left, right), left_key=left_key,
+                        right_key=right_key, prefix=prefix,
+                        name=f"[{left_key}]")
+
+    def expand_join(self, left: int, right: int, left_key: str,
+                    right_key: str, capacity: Optional[int] = None,
+                    slack: float = 1.5, prefix: str = "") -> int:
+        """1:N offset-expansion left join.  ``capacity`` bounds the static
+        output size; ``None`` defers it to the optimizer's capacity planner
+        (or, failing that, a trace-time ``(L+R)*slack`` heuristic)."""
+        return self.add("expand_join", (left, right), left_key=left_key,
+                        right_key=right_key, prefix=prefix,
+                        capacity=None if capacity is None else int(capacity),
+                        slack=float(slack), name=f"[{left_key}]")
+
+    def exchange(self, t: int, key: str,
+                 per_dest_capacity: Optional[int] = None, slack: float = 2.0,
+                 min_per_dest: int = 64) -> int:
+        """Hash-partition shuffle on ``key``.  Identity when executed off-mesh
+        (n_shards == 1); under ``shard_map`` it is the Spark exchange."""
+        return self.add(
+            "exchange", (t,), key=key, slack=float(slack),
+            min_per_dest=int(min_per_dest),
+            per_dest_capacity=(None if per_dest_capacity is None
+                               else int(per_dest_capacity)),
+            name=f"[{key}]")
+
+    def slice_time(self, t: int, col: str, lo: int, hi: int,
+                   capacity: Optional[int] = None) -> int:
+        """Rows with ``lo <= col < hi``, compacted to ``capacity`` rows when
+        given (the capacity planner sets it from the slice's actual count)."""
+        return self.add("slice_time", (t,), col=col, lo=int(lo), hi=int(hi),
+                        capacity=None if capacity is None else int(capacity),
+                        name=f"[{lo},{hi})")
 
     def select(self, t: int, cols: Sequence[str]) -> int:
         return self.add("select", (t,), cols=tuple(sorted(set(cols))))

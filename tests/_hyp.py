@@ -1,0 +1,47 @@
+"""Import-or-stub hypothesis.
+
+CI installs hypothesis and runs the property tests for real; bare containers
+(no hypothesis) must still *collect* every test module and run the non-property
+tests, so property tests degrade to clean per-test skips instead of killing
+the module at import.  Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: decorator-time strategy
+        expressions like ``st.integers(0, 9)`` must evaluate, but their
+        values are never consumed (the stubbed ``given`` skips the test)."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg stub: pytest must not try to resolve the property
+            # arguments as fixtures
+            def skipped():
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco

@@ -1,10 +1,9 @@
 """Cohort algebra tests: bitset <-> set homomorphism (hypothesis), flow
 flowcharts, description composition (paper Supplementary Out[6])."""
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import Bitset, Category, Cohort, CohortCollection, CohortFlow, make_events
 

@@ -1,10 +1,8 @@
 """ColumnarTable unit + property tests (the Parquet-analogue invariants)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core.columnar import ColumnarTable, NULL_INT, is_null
 

@@ -1,0 +1,265 @@
+"""Plan-level flattening: join/exchange nodes in the Study IR.
+
+Covers the join edge cases (NULL keys on both sides, duplicate right keys,
+overflow accounting), the optimizer's join rewrites (capacity planning,
+exchange pruning), the bounded ``flatten_sliced`` capacity, and the parity of
+``Study.flatten`` with the eager ``flatten_star`` — single-device and under
+``shard_map``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DCIR_SCHEMA, PMSI_MCO_SCHEMA, drug_dispenses, medical_acts_dcir
+from repro.core.columnar import ColumnarTable, NULL_INT, is_null
+from repro.core.flattening import (
+    distributed_flatten, expand_join, flatten_sliced, flatten_star, lookup_join,
+)
+from repro.data.synthetic import SyntheticConfig, generate_dcir, generate_pmsi
+from repro.study import Study, optimize, plan_capacities, prune_exchanges
+
+CFG = SyntheticConfig(n_patients=200, seed=3)
+
+
+@pytest.fixture(scope="module")
+def dcir():
+    return generate_dcir(CFG)
+
+
+@pytest.fixture(scope="module")
+def pmsi():
+    return generate_pmsi(CFG)
+
+
+def _table(**cols):
+    return ColumnarTable.from_columns(
+        {k: np.asarray(v, np.int32) for k, v in cols.items()})
+
+
+# ---------------------------------------------------------------------------
+# join edge cases
+# ---------------------------------------------------------------------------
+def test_lookup_join_null_keys_never_match():
+    # SQL semantics: a NULL left key must not match a NULL right key
+    left = _table(k=[1, int(NULL_INT), 3])
+    right = _table(k=[int(NULL_INT), 1], v=[111, 222])
+    out, st = lookup_join(left, right, "k", "k")
+    o = out.to_numpy()
+    assert o["v"].tolist() == [222, int(NULL_INT), int(NULL_INT)]
+    assert int(st.matched) == 1
+    assert int(st.null_keys) == 2  # one per side
+    st.assert_no_loss()
+
+
+def test_lookup_join_duplicate_right_keys_take_first_sorted():
+    # N:1 contract violated by the data: the join still yields one row per
+    # left row, gathering the first matching right row in sort order
+    left = _table(k=[7, 8])
+    right = _table(k=[7, 7, 8], v=[10, 20, 30])
+    out, st = lookup_join(left, right, "k", "k")
+    o = out.to_numpy()
+    assert int(o["v"][1]) == 30
+    assert int(o["v"][0]) in (10, 20)  # one of the duplicates, deterministic
+    assert int(st.rows_out) == 2
+
+
+def test_expand_join_null_keys_emit_single_null_row():
+    left = _table(k=[int(NULL_INT), 5])
+    right = _table(k=[int(NULL_INT), int(NULL_INT), 5], v=[1, 2, 3])
+    out, st = expand_join(left, right, "k", "k", out_capacity=8)
+    o = out.to_numpy()
+    # null-key left row -> exactly one output row with null right attributes
+    rows = sorted(zip(o["k"].tolist(), o["v"].tolist()))
+    assert rows == [(int(NULL_INT), int(NULL_INT)), (5, 3)]
+    assert int(st.matched) == 1
+    assert int(st.null_keys) == 3
+    st.assert_no_loss()
+
+
+def test_expand_join_overflow_accounting_is_exact():
+    # left key 1 matches 4 right rows, key 2 matches 2: true total = 6
+    left = _table(k=[1, 2])
+    right = _table(k=[1, 1, 1, 1, 2, 2], v=[0, 1, 2, 3, 4, 5])
+    full, st_full = expand_join(left, right, "k", "k", out_capacity=6)
+    assert int(st_full.overflow) == 0 and int(full.count) == 6
+    clipped, st_clip = expand_join(left, right, "k", "k", out_capacity=4)
+    assert int(st_clip.overflow) == 2          # exactly total - capacity
+    assert int(clipped.count) == 4
+    with pytest.raises(AssertionError):
+        st_clip.assert_no_loss()
+
+
+def test_expand_join_duplicate_left_keys_cross_product():
+    left = _table(k=[4, 4])
+    right = _table(k=[4, 4, 4], v=[1, 2, 3])
+    out, st = expand_join(left, right, "k", "k", out_capacity=16)
+    assert int(out.count) == 6                 # 2 x 3 pairs
+    st.assert_no_loss()
+
+
+# ---------------------------------------------------------------------------
+# flatten_sliced capacity bound
+# ---------------------------------------------------------------------------
+def test_flatten_sliced_capacity_bounded(dcir):
+    flat, _ = flatten_star(DCIR_SCHEMA, dcir)
+    n_slices = 6
+    sliced, stats = flatten_sliced(DCIR_SCHEMA, dcir, "execution_date",
+                                   n_slices, 14_600, 14_600 + 3 * 365)
+    assert int(sliced.count) == int(flat.count)
+    # each slice allocates ~its own row count, not the full central capacity
+    assert sliced.capacity < flat.capacity * 2
+    assert sliced.capacity < flat.capacity * n_slices  # the old blow-up
+    for s in stats:
+        s.assert_no_loss()
+
+
+# ---------------------------------------------------------------------------
+# optimizer join rewrites
+# ---------------------------------------------------------------------------
+def test_capacity_planner_sets_exact_expand_capacities(pmsi):
+    s = Study(n_patients=CFG.n_patients).flatten(PMSI_MCO_SCHEMA, name="PMSI")
+    opt = s.optimized_plan(tables=dict(pmsi))
+    caps = [n.get("capacity") for n in opt.nodes if n.op == "expand_join"]
+    assert all(c is not None for c in caps)
+    # planner capacity: exact row count rounded up to 64 — at most one
+    # quantum above the true output size, and tighter than the (L+R)*1.5
+    # trace-time guess
+    res = s.run(dict(pmsi))
+    res.assert_no_loss()
+    out_rows = [d["rows_out"] for _, d in sorted(res.flatten_stats.items())
+                if d["stage"].startswith("expand_join")]
+    for cap, rows in zip(caps, out_rows):
+        assert rows <= cap < rows + 64 + 1
+
+
+def test_prune_exchanges_drops_redundant_and_local():
+    from repro.study import PlanBuilder
+
+    s = Study(n_patients=8)
+    s.flatten(DCIR_SCHEMA)                       # exchange=True by default
+    raw = s.plan()
+    # the builder tracks the left side's partitioning, so the raw plan
+    # already has only the needed exchanges: one left + one right per
+    # distinct join key (flow_id joined twice), no final patient exchange
+    # after the patient_id join (2 left + 3 right = 5)
+    assert raw.count_ops()["exchange"] == 5
+    # on-mesh those are all load-bearing; off-mesh every exchange drops
+    assert prune_exchanges(raw, n_shards=4).count_ops()["exchange"] == 5
+    assert prune_exchanges(raw, n_shards=1).count_ops().get("exchange", 0) == 0
+    # a declared pre-partitioning makes the matching exchange redundant
+    b = PlanBuilder()
+    t = b.scan_star("T", partitioned_on="k")
+    b.set_output("out", b.exchange(t, "k"))
+    assert prune_exchanges(b.build(),
+                           n_shards=4).count_ops().get("exchange", 0) == 0
+
+
+def test_replanned_capacities_follow_data_distribution():
+    # same-shaped inputs, different join-key distributions: the second run
+    # must RE-plan capacities, not reuse the first run's exact sizes (a
+    # stale capacity would silently truncate rows)
+    import numpy as _np
+
+    from repro.core.schema import JoinEdge, StarSchema, TableSchema
+    i32 = _np.dtype(_np.int32)
+    schema = StarSchema(
+        name="S",
+        central=TableSchema("C", {"k": i32, "patient_id": i32}, key="k"),
+        dims=(TableSchema("D", {"k": i32, "v": i32}, key="k"),),
+        joins=(JoinEdge("C", "D", "k", "k", one_to_many=True),),
+    )
+    central = _table(k=[0, 1, 2, 3], patient_id=[0, 1, 2, 3])
+    uniform = {"C": central, "D": _table(k=[0, 1, 2, 3] * 2, v=list(range(8)))}
+    skewed = {"C": central, "D": _table(k=[0] * 8, v=list(range(8)))}
+    study = Study(n_patients=4).flatten(schema, name="f")
+    ra = study.run(dict(uniform))
+    ra.assert_no_loss()
+    assert int(ra.events["f"].count) == 8       # every key matches twice
+    rb = study.run(dict(skewed))                # k=0: 8 matches, others miss
+    rb.assert_no_loss()
+    assert int(rb.events["f"].count) == 8 + 3
+
+
+def test_capacity_planner_handles_time_slices(dcir):
+    s = (Study(n_patients=CFG.n_patients)
+         .flatten(DCIR_SCHEMA, time_slices=3, time_column="execution_date",
+                  t0=14_600, t1=14_600 + 3 * 365))
+    opt = s.optimized_plan(tables=dict(dcir))
+    caps = [n.get("capacity") for n in opt.nodes if n.op == "slice_time"]
+    assert caps and all(c is not None for c in caps)
+    res = s.run(dict(dcir))
+    res.assert_no_loss()
+    flat, _ = flatten_star(DCIR_SCHEMA, dcir)
+    assert int(res.events["DCIR"].count) == int(flat.count)
+
+
+# ---------------------------------------------------------------------------
+# plan-level Study.flatten vs eager flatten_star parity
+# ---------------------------------------------------------------------------
+def _assert_tables_equal(a: ColumnarTable, b: ColumnarTable):
+    x, y = a.to_numpy(), b.to_numpy()
+    assert set(x) == set(y)
+    for k in x:
+        assert (x[k] == y[k]).all(), k
+
+
+@pytest.mark.parametrize("schema,gen", [(DCIR_SCHEMA, generate_dcir),
+                                        (PMSI_MCO_SCHEMA, generate_pmsi)])
+def test_study_flatten_matches_eager(schema, gen):
+    tables = gen(CFG)
+    eager, _ = flatten_star(schema, tables)
+    res = (Study(n_patients=CFG.n_patients)
+           .flatten(schema, name="flat")
+           .run(dict(tables)))
+    res.assert_no_loss()
+    _assert_tables_equal(eager, res.events["flat"])
+
+
+def test_study_flatten_matches_eager_sharded(dcir):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eager, _ = flatten_star(DCIR_SCHEMA, dcir)
+    res = (Study(n_patients=CFG.n_patients)
+           .flatten(DCIR_SCHEMA, name="flat")
+           .run(dict(dcir), mesh=mesh))
+    res.assert_no_loss()
+    _assert_tables_equal(eager, res.events["flat"])
+
+
+def test_flatten_extract_one_plan(dcir):
+    """Raw star tables -> flat -> events -> cohort, one optimized plan."""
+    s = (Study(n_patients=CFG.n_patients)
+         .flatten(DCIR_SCHEMA)
+         .extract(drug_dispenses(), name="drugs")
+         .extract(medical_acts_dcir(), name="acts")
+         .cohort("drugged", "drugs"))
+    res = s.run(dict(dcir))
+    # flattening and extraction share ONE plan: extract chains onto the
+    # flatten node instead of scanning a pre-flattened env table
+    ops = res.plan.count_ops()
+    assert ops.get("lookup_join", 0) == 3 and "scan" not in ops
+    assert ops["select"] == 1                  # merged union projection
+    flat, _ = flatten_star(DCIR_SCHEMA, dcir)
+    for name, ex in [("drugs", drug_dispenses()), ("acts", medical_acts_dcir())]:
+        _assert_tables_equal(ex(flat), res.events[name])
+    # per-join stats land in the OperationLog automatically
+    join_entries = [e for e in res.log.entries
+                    if e["op"].startswith("plan:lookup_join")]
+    assert len(join_entries) == 3
+    for e in join_entries:
+        assert e["params"]["overflow"] == 0
+        assert e["params"]["key_sum_in"] == e["params"]["key_sum_out"]
+
+
+def test_distributed_flatten_wrapper_single_device(dcir):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    flat_d, overflow = distributed_flatten(DCIR_SCHEMA, dcir, mesh)
+    assert int(overflow) == 0
+    eager, _ = flatten_star(DCIR_SCHEMA, dcir)
+    a, b = eager.to_numpy(), flat_d.to_numpy()
+    ia, ib = np.argsort(a["flow_id"]), np.argsort(b["flow_id"])
+    for k in a:
+        assert (a[k][ia] == b[k][ib]).all(), k

@@ -1,10 +1,9 @@
 """SCALPEL-Flattening tests: joins vs numpy oracles, temporal slicing
 equivalence, monitoring (no-loss) statistics."""
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core.columnar import ColumnarTable, NULL_INT, is_null
 from repro.core.flattening import expand_join, flatten_sliced, flatten_star, lookup_join

@@ -1,10 +1,9 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp refs."""
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from numpy.testing import assert_allclose
 
 from repro.kernels import ops, ref

@@ -1,9 +1,8 @@
 """Cross-cutting property tests (system invariants, hypothesis-driven)."""
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
 
 from repro.core import Bitset, Cohort
 from repro.core.columnar import ColumnarTable

@@ -1,10 +1,9 @@
 """Transformer tests: exposures / follow-up / fractures / trackloss against
 sequential python oracles (including a hypothesis sweep for exposures)."""
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import (
     Category, DCIR_SCHEMA, exposures, flatten_star, follow_up, fractures,
