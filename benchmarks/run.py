@@ -85,6 +85,36 @@ def bench_flatten_plan(n_patients: int = 4_000, repeats: int = 5) -> None:
                 "FAILED — the plan path diverged from eager flatten_star")
 
 
+def bench_pruning(n_patients: int = 2_000, repeats: int = 3) -> None:
+    """Column pruning gate: the pruned plan must feed strictly fewer bytes
+    into the flatten joins than the unpruned baseline (bytes-materialized
+    proxy: sum of column sizes entering each join), with event parity.
+    Emits ``BENCH_pruning.json`` next to the working directory."""
+    import json
+
+    from benchmarks import pruning_bench
+
+    rows = pruning_bench.run(n_patients=n_patients, repeats=repeats)
+    with open("BENCH_pruning.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _emit(
+            f"pruning.{r['database']}",
+            r["pruned_s"] * 1e6,
+            f"join_bytes={r['join_bytes_pruned']}/{r['join_bytes_unpruned']} "
+            f"reduction={r['reduction']} parity={r['parity']}",
+        )
+        if r["parity"] != "pass":
+            raise SystemExit(
+                f"pruning.{r['database']}: pruned/unpruned event parity "
+                "FAILED — column pruning changed extractor results")
+        if r["join_bytes_pruned"] >= r["join_bytes_unpruned"]:
+            raise SystemExit(
+                f"pruning.{r['database']}: pruning did not reduce the bytes "
+                f"materialized into the joins "
+                f"({r['join_bytes_pruned']} >= {r['join_bytes_unpruned']})")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -124,11 +154,13 @@ def main() -> None:
     if args.smoke:
         bench_table1()
         bench_flatten_plan(n_patients=500, repeats=2)
+        bench_pruning(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
         return
     bench_table1()
     bench_flattening()
     bench_flatten_plan()
+    bench_pruning()
     bench_fig3()
     bench_study()
     bench_roofline()

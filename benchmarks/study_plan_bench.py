@@ -93,7 +93,7 @@ def run(n_patients: int = 2_000, repeats: int = 10, engine: str = "xla") -> List
             "name": f"eager_{len(exts)}x",
             "seconds": eager_s,
             "derived": f"scans={eager_ops.get('scan', 0)} "
-                       f"mask_nodes={eager_ops.get('drop_nulls', 0) + eager_ops.get('value_filter', 0)}",
+                       f"mask_nodes={eager_ops.get('predicate', 0)}",
         },
         {
             "name": f"fused_plan_{len(exts)}x",

@@ -21,7 +21,7 @@ from repro.core import (
     hospital_stays, medical_acts_dcir, medical_acts_pmsi, stats,
 )
 from repro.data.synthetic import SyntheticConfig, generate_snds
-from repro.study import Study
+from repro.study import Study, col
 
 cfg = SyntheticConfig(n_patients=2_000, seed=42)
 P = cfg.n_patients
@@ -32,11 +32,16 @@ flat_dcir, _ = flatten_star(DCIR_SCHEMA, dcir)
 flat_pmsi, _ = flatten_star(PMSI_MCO_SCHEMA, pmsi)
 
 # -- tasks (a)-(g) as one lazy plan -------------------------------------------
+# Predicates are typed column expressions (``col()``/``Expr``): the engine
+# sees exactly which columns each step reads (fusing them into one mask pass
+# per scan branch and pruning everything else), instead of opaque callables.
 study = (Study(n_patients=P, window=(14_600, STUDY_END))
          .patients("IR_BEN")                                       # (a)
          .extract(drug_dispenses(), name="drug_purchases")         # (b)
-         .extract(drug_dispenses(codes=list(range(65))),
-                  name="prevalent_drugs")                          # (c)
+         .extract(drug_dispenses()                                 # (c)
+                  .filtered(col("cip13").isin(range(65))
+                            & col("execution_date").between(14_600, STUDY_END)),
+                  name="prevalent_drugs")
          .extract(medical_acts_dcir(), name="acts")                # (e) outpatient
          .extract(medical_acts_pmsi(), name="hospital_acts")       # (e) inpatient
          .extract(diagnoses(), name="diagnoses")                   # (f)
@@ -50,10 +55,12 @@ study = (Study(n_patients=P, window=(14_600, STUDY_END))
          .transform("follow_up", "extract_patients", "drug_purchases",
                     name="follow_up", study_end=STUDY_END)
          # -- study assembly (Supplementary In[5]) ----------------------------
+         # cohort algebra has a real parser now: & binds tighter than | and
+         # -, parentheses group — the grouping below is explicit
          .cohort("base", "extract_patients")
          .cohort("exposed", "exposures")
          .cohort("fractured", "fractures")
-         .cohort("final", "exposed & base - fractured")
+         .cohort("final", "(exposed & base) - fractured")
          .flow("base", "exposed", "final")
          # -- ML export (FeatureDriver) ---------------------------------------
          .featurize("X", cohort="final", kind="dense",

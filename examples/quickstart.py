@@ -20,7 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import DCIR_SCHEMA, drug_dispenses, medical_acts_dcir, stats
 from repro.data.synthetic import SyntheticConfig, generate_dcir
-from repro.study import Study, flow_rows_from_log
+from repro.study import Study, column_audit_from_log, flow_rows_from_log
 
 # 1. normalized claims data (stand-in for the CSV exports CNAM dumps)
 cfg = SyntheticConfig(n_patients=1_000, seed=0)
@@ -38,16 +38,22 @@ study = (Study(n_patients=cfg.n_patients)
          .cohort("final", "drugged & base - acts")
          .flow("base", "drugged", "final"))
 
-ops = study.optimized_plan(tables=dict(dcir)).count_ops()
+opt = study.optimized_plan(tables=dict(dcir))
+ops = opt.count_ops()
 print(f"\noptimized plan: {ops.get('scan_star', 0)} star-table scans, "
       f"{ops.get('lookup_join', 0)} joins, "
       f"{ops.get('fused_mask', 0)} fused masks, "
       f"{ops.get('compact', 0)} compactions")
+# join-aware column pruning: once extractors chain onto the flat node, every
+# dimension column no extractor reads is dropped BEFORE the joins — the
+# narrowed scan projections are visible right in the plan
+for n in opt.nodes:
+    if n.op == "select" and n.get("pruned_columns"):
+        print(f"  pruned scan -> keeps {list(n.get('cols'))}, "
+              f"drops {list(n.get('pruned_columns'))}")
 
 res = study.run(dict(dcir))                         # raw star tables in
 res.assert_no_loss()                                # the paper's join audit
-flat = res.events["DCIR"]
-print(f"flat table: {int(flat.count)} rows x {len(flat.column_names)} cols")
 for i, d in sorted(res.flatten_stats.items()):
     print(f"  {d['stage']}: rows {d['rows_in']}->{d['rows_out']} "
           f"matched={d['matched']} overflow={d['overflow']}")
@@ -57,6 +63,10 @@ print(f"describe(): {final.describe()}")
 print("\n" + res.flow.render())
 print("\nflowchart rebuilt from the OperationLog alone:")
 print(flow_rows_from_log(res.log))
+print("\ncolumn audit (what each stage read) from the OperationLog alone:")
+for r in column_audit_from_log(res.log)[:4]:
+    print(f"  {r['stage']}: read={r['required_columns']} "
+          f"pruned={r['pruned_columns']}")
 
 # 5. automatic statistics report
 pats = res.events["extract_patients"]

@@ -19,7 +19,7 @@ SCALPEL-Analysis can rebuild flowcharts from metadata (paper §3.4 last ¶).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,16 @@ class Extractor:
     null_cols: Tuple[str, ...] = ()  # step-2 null filter columns
     codes: Optional[Tuple[int, ...]] = None  # step-2b value whitelist
     distinct: Tuple[str, ...] = ()   # dedupe keys (for 1:N flat layouts)
+    # optional typed row predicate (repro.study.expr.Expr) applied after the
+    # null/whitelist steps; excluded from equality/hash (Exprs are
+    # value-built trees) — use ``filtered()`` to attach one
+    where: Optional[Any] = dataclasses.field(default=None, compare=False)
+
+    def filtered(self, expr) -> "Extractor":
+        """A copy of this extractor with ``expr`` AND-ed into its ``where``
+        predicate: ``drug_dispenses().filtered(col("cip13").isin(codes))``."""
+        combined = expr if self.where is None else (self.where & expr)
+        return dataclasses.replace(self, where=combined)
 
     def projection(self) -> Tuple[str, ...]:
         """Step-1 column set: only the columns this extractor touches."""
@@ -81,6 +91,9 @@ class Extractor:
                 needed.append(c)
         needed += [c for c in self.null_cols if c not in needed]
         needed += [c for c in self.distinct if c not in needed]
+        if self.where is not None:
+            needed += [c for c in self.where.required_columns()
+                       if c not in needed]
         return tuple(sorted(set(needed)))
 
     def contribute(self, b, compact: bool = True,
@@ -96,6 +109,8 @@ class Extractor:
         t = b.drop_nulls(t, self.null_cols or (self.value_col,))
         if self.codes is not None:
             t = b.value_filter(t, self.value_col, self.codes)
+        if self.where is not None:
+            t = b.predicate(t, self.where, label="where")
         if self.distinct:
             t = b.dedupe(t, self.distinct)
         t = b.conform_events(

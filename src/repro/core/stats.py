@@ -4,6 +4,12 @@ statistics over cohorts (paper §3.5 — ">25 statistics", cached, pluggable).
 Each statistic is a pure function ``(cohort, patients|events) -> dict`` whose
 heavy part is jit-compiled; a tiny registry makes adding a custom statistic a
 one-liner, mirroring the paper's "adding a custom one being very easy".
+
+Empty-cohort semantics: every statistic is total over empty cohorts/event
+sets and NaN-free.  Ratios and means whose denominator (subject or event
+count) is zero return the documented sentinel ``0.0`` / ``0`` alongside an
+explicit count key (``n``/``pairs``/…) so a consumer can distinguish "mean
+is zero" from "nothing to average" without ever meeting a NaN.
 """
 from __future__ import annotations
 
@@ -162,12 +168,16 @@ def _per_patient_counts(cohort: Cohort) -> jax.Array:
 
 @register("age_mean")
 def age_mean(cohort: Cohort, patients: ColumnarTable, ref_date: int = 14_600, **_):
+    """Mean/std of age at ``ref_date``.  Empty cohort (no matching patient
+    rows): sentinel ``{"mean": 0.0, "std": 0.0, "n": 0}`` — never NaN."""
     m = _cohort_patient_mask(cohort, patients)
+    n_true = int(m.sum())
+    if n_true == 0:
+        return {"mean": 0.0, "std": 0.0, "n": 0}
     age = (ref_date - patients.columns["birth_date"]) / 365.0
-    n = jnp.maximum(m.sum(), 1)
-    mean = jnp.where(m, age, 0).sum() / n
-    var = jnp.where(m, (age - mean) ** 2, 0).sum() / n
-    return {"mean": float(mean), "std": float(jnp.sqrt(var))}
+    mean = jnp.where(m, age, 0).sum() / n_true
+    var = jnp.where(m, (age - mean) ** 2, 0).sum() / n_true
+    return {"mean": float(mean), "std": float(jnp.sqrt(var)), "n": n_true}
 
 
 @register("subject_count")
@@ -182,11 +192,16 @@ def events_total(cohort: Cohort, *_, **__):
 
 @register("events_per_patient_percentiles")
 def events_per_patient_percentiles(cohort: Cohort, *_, **__):
+    """Event-count percentiles over patients with >=1 event.  No such
+    patients (empty cohort/event set): sentinel ``p50=p90=p99=0`` with
+    ``n=0`` — ``np.percentile`` of an empty array would be NaN."""
     per = np.asarray(_per_patient_counts(cohort))
     per = per[per > 0]
     if per.size == 0:
-        return {"p50": 0, "p90": 0, "p99": 0}
-    return {f"p{p}": int(np.percentile(per, p)) for p in (50, 90, 99)}
+        return {"p50": 0, "p90": 0, "p99": 0, "n": 0}
+    out = {f"p{p}": int(np.percentile(per, p)) for p in (50, 90, 99)}
+    out["n"] = int(per.size)
+    return out
 
 
 @register("distinct_values")
@@ -266,6 +281,10 @@ def patients_without_events(cohort: Cohort, *_, **__):
 
 @register("mean_gap_days")
 def mean_gap_days(cohort: Cohort, *_, **__):
+    """Mean gap between a patient's consecutive events.  No consecutive
+    same-patient pair (empty or singleton-per-patient event sets): sentinel
+    ``{"mean_gap": 0.0, "pairs": 0}`` — the gap sum is never divided by a
+    zero pair count."""
     from repro.core.events import sort_events as _sort
 
     ev = _sort(_cohort_events(cohort))
@@ -273,10 +292,12 @@ def mean_gap_days(cohort: Cohort, *_, **__):
     start = ev.columns["start"]
     same = jnp.concatenate([jnp.zeros((1,), bool),
                             (pid[1:] == pid[:-1]) & ev.valid[:-1]]) & ev.valid
+    pairs = int(same.sum())
+    if pairs == 0:
+        return {"mean_gap": 0.0, "pairs": 0}
     prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), start[:-1]])
     gaps = jnp.where(same, start - prev, 0)
-    n = jnp.maximum(same.sum(), 1)
-    return {"mean_gap": float(gaps.sum() / n)}
+    return {"mean_gap": float(gaps.sum() / pairs), "pairs": pairs}
 
 
 @register("mortality_rate")
@@ -290,9 +311,14 @@ def mortality_rate(cohort: Cohort, patients: ColumnarTable, **_):
 
 @register("gender_ratio")
 def gender_ratio(cohort: Cohort, patients: ColumnarTable, **_):
+    """Male fraction of the cohort.  No gendered subjects at all: sentinel
+    ``{"male_fraction": 0.0, "n": 0}`` (a 0/0 ratio is reported as 0.0 with
+    the zero denominator made explicit, never NaN)."""
     d = gender_distribution(cohort, patients)
-    tot = max(d["male"] + d["female"], 1)
-    return {"male_fraction": round(d["male"] / tot, 4)}
+    tot = d["male"] + d["female"]
+    if tot == 0:
+        return {"male_fraction": 0.0, "n": 0}
+    return {"male_fraction": round(d["male"] / tot, 4), "n": tot}
 
 
 @register("value_range")

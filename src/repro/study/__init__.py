@@ -1,26 +1,37 @@
 """repro.study — the lazy query-plan layer over SCALPEL3's three libraries.
 
-``Study`` (api) builds a ``Plan`` (plan) of scan/mask/conform/compact/cohort/
-featurize nodes; ``optimize`` (optimizer) fuses masks, shares source scans and
-defers compaction; ``execute`` (executor) jit-compiles the plan once per
-(structure, table spec, engine) and auto-records ``OperationLog`` provenance.
+``Study`` (api) builds a ``Plan`` (plan) of scan/predicate/conform/compact/
+cohort/featurize nodes; predicates are typed ``col()``/``Expr`` trees (expr)
+the optimizer can analyze; ``optimize`` (optimizer) fuses predicate chains
+into single-pass masks, shares source scans, defers compaction and prunes
+unread columns backwards through the flatten joins; ``execute`` (executor)
+jit-compiles the plan once per (structure, table spec, engine) and
+auto-records ``OperationLog`` provenance, including per-stage column audits.
 """
 from repro.study.plan import Node, Plan, PlanBuilder
+from repro.study.expr import (
+    Expr, col, lit, all_of, any_of, expr_from_param, fused_predicate,
+    node_predicate, parse_cohort_expr,
+)
 from repro.study.optimizer import (
     optimize, merge_projections, fuse_masks, defer_compaction,
-    plan_capacities, prune_exchanges, dce,
+    prune_columns, plan_capacities, prune_exchanges, dce,
+    available_columns, required_columns,
 )
 from repro.study.executor import execute, TRANSFORMS, jit_cache_info, clear_jit_cache
 from repro.study.api import (
     Study, StudyResult, contribute_flatten, contribute_flatten_sliced,
-    flow_rows_from_log,
+    flow_rows_from_log, column_audit_from_log,
 )
 
 __all__ = [
     "Node", "Plan", "PlanBuilder",
+    "Expr", "col", "lit", "all_of", "any_of", "expr_from_param",
+    "fused_predicate", "node_predicate", "parse_cohort_expr",
     "optimize", "merge_projections", "fuse_masks", "defer_compaction",
-    "plan_capacities", "prune_exchanges", "dce",
+    "prune_columns", "plan_capacities", "prune_exchanges", "dce",
+    "available_columns", "required_columns",
     "execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache",
     "Study", "StudyResult", "contribute_flatten", "contribute_flatten_sliced",
-    "flow_rows_from_log",
+    "flow_rows_from_log", "column_audit_from_log",
 ]

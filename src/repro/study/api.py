@@ -32,10 +32,12 @@ from repro.core.columnar import ColumnarTable
 from repro.core.metadata import OperationLog
 from repro.study import executor as _executor
 from repro.study import optimizer as _optimizer
+from repro.study.expr import CohortRef, parse_cohort_expr
 from repro.study.plan import COHORT_OPS, Plan, PlanBuilder, TABLE_OPS
 
 __all__ = ["Study", "StudyResult", "contribute_flatten",
-           "contribute_flatten_sliced", "flow_rows_from_log"]
+           "contribute_flatten_sliced", "flow_rows_from_log",
+           "column_audit_from_log"]
 
 _FLOW_OUT = "__flow__"
 
@@ -61,10 +63,12 @@ def contribute_flatten(b: PlanBuilder, schema, central: Optional[int] = None,
     it), with ``partitioned_on`` describing *its* partitioning.
     """
     t = central if central is not None else b.scan_star(
-        schema.central.name, star=schema.name, partitioned_on=partitioned_on)
+        schema.central.name, star=schema.name, partitioned_on=partitioned_on,
+        columns=tuple(schema.central.columns))
     pkey = partitioned_on
     for edge in schema.joins:
-        r = b.scan_star(edge.right, star=schema.name)
+        r = b.scan_star(edge.right, star=schema.name,
+                        columns=tuple(schema.table(edge.right).columns))
         if exchange:
             if pkey != edge.left_key:
                 t = b.exchange(t, edge.left_key, slack=exchange_slack,
@@ -99,7 +103,8 @@ def contribute_flatten_sliced(b: PlanBuilder, schema, time_column: str,
     parts = []
     for i in range(int(n_slices)):
         t = b.scan_star(schema.central.name, star=schema.name,
-                        partitioned_on=partitioned_on)
+                        partitioned_on=partitioned_on,
+                        columns=tuple(schema.central.columns))
         t = b.slice_time(t, time_column, int(edges[i]), int(edges[i + 1]))
         parts.append(contribute_flatten(b, schema, central=t,
                                         partitioned_on=partitioned_on, **kw))
@@ -146,6 +151,8 @@ class Study:
         self._sources: Dict[str, ColumnarTable] = {}
         self._flow_names: Optional[List[str]] = None
         self._feature_names: List[str] = []
+        self._flatten_keep: Dict[str, Optional[bool]] = {}  # name -> keep mode
+        self._chained: set = set()            # flatten names extractors read
         self._opt_cache: Optional[Tuple[Tuple, Plan]] = None  # (key, optimized)
 
     # -- builder steps -------------------------------------------------------
@@ -166,7 +173,8 @@ class Study:
                 time_column: Optional[str] = None, t0: Optional[int] = None,
                 t1: Optional[int] = None, expand_capacity: Optional[int] = None,
                 expand_slack: float = 1.5, exchange: bool = True,
-                partitioned_on: Optional[str] = None) -> "Study":
+                partitioned_on: Optional[str] = None,
+                keep: Optional[bool] = None) -> "Study":
         """SCALPEL-Flattening as plan nodes: the star schema's
         denormalization joins enter the same Plan IR as extraction, so one
         ``optimize()`` + executor pass jit-compiles raw star tables all the
@@ -180,6 +188,16 @@ class Study:
         concatenated, each with a bounded capacity set by the optimizer's
         capacity planner.  ``exchange`` keeps the plan mesh-ready (exchange
         nodes are pruned off-mesh and are the identity when unpruned).
+
+        ``keep`` controls whether the flat table is a *realized output* of
+        the study (full schema in ``result.events[name]``) or just the
+        chaining point for later ``extract()`` calls.  The default ``None``
+        is automatic: keep the flat table unless an extractor chains onto it
+        — once extraction consumes it, demoting it to an interior node lets
+        the optimizer's column-pruning pass drop every dimension column no
+        extractor reads *before the joins materialize it* (a named output
+        would pin the full flat schema).  Pass ``keep=True`` to always
+        materialize the flat table, ``keep=False`` to never.
         """
         b = self._b
         if time_slices:
@@ -195,6 +213,7 @@ class Study:
                 b, schema, expand_capacity=expand_capacity,
                 expand_slack=expand_slack, exchange=exchange,
                 partitioned_on=partitioned_on)
+        self._flatten_keep[name or schema.name] = keep
         return self._register(name or schema.name, nid, "table")
 
     def extract(self, extractor, name: Optional[str] = None,
@@ -207,6 +226,7 @@ class Study:
         if (extractor.source in self._names
                 and self._kinds.get(extractor.source) == "table"):
             base = self._names[extractor.source]
+            self._chained.add(extractor.source)
         nid = extractor.contribute(self._b, compact=compact, base=base)
         return self._register(name or extractor.name, nid, "events")
 
@@ -235,12 +255,33 @@ class Study:
         nid = self._b.concat([self._node_of(x) for x in inputs], name=name)
         return self._register(name, nid, "events")
 
+    def filter(self, source: str, expr, name: Optional[str] = None) -> "Study":
+        """Filter a named table/events output with a typed column expression:
+        ``study.filter("drugs", col("start") >= t0, name="recent")``.  The
+        predicate rides the plan like any extractor mask (fusable, prunable);
+        the filtered table registers under ``name`` with one compaction."""
+        if name is None:
+            name = f"{source}_filtered"
+        kind = self._kinds.get(source)
+        if kind not in ("table", "events"):
+            raise ValueError(f"filter source {source!r} is not a table output")
+        nid = self._b.predicate(self._node_of(source), expr, label=name)
+        return self._register(name, nid, kind)
+
     def cohort(self, name: str, expr: str,
                description: Optional[str] = None) -> "Study":
-        """Define a cohort from a whitespace-separated algebra expression:
-        ``"exposed & base - fractured"`` (left-associative ∩ ∪ \\ over
-        previously declared cohorts / extractions / transforms)."""
-        nid = self._parse_expr(expr, name)
+        """Define a cohort from an algebra expression over previously
+        declared cohorts / extractions / transforms, e.g.
+        ``"(exposed & base) - fractured"``.  Parsed by a real
+        recursive-descent parser (``expr.parse_cohort_expr``): ``&`` (∩)
+        binds tighter than ``|`` (∪) and ``-`` (\\), parentheses group, and
+        each level is left-associative.  Legacy flat expressions keep their
+        meaning bit-for-bit wherever the old single-precedence left fold
+        agreed with standard precedence (single-operator chains, and mixes
+        where every ``&`` precedes ``|``/``-``); where the old fold
+        disagreed — ``"a | b & c"``, ``"a - b & c"`` — the old reading was
+        the bug this parser fixes, and parentheses restore it explicitly."""
+        nid = self._lower_cohort(parse_cohort_expr(expr), name)
         self._register(name, nid, "cohort")
         return self
 
@@ -283,23 +324,37 @@ class Study:
             return nid
         return self._b.cohort_from_events(nid, name=name)
 
-    def _parse_expr(self, expr: str, name: str) -> int:
-        toks = expr.split()
-        if not toks or len(toks) % 2 == 0:
-            raise ValueError(f"malformed cohort expression {expr!r}")
-        acc = self._cohort_node(toks[0])
-        for k in range(1, len(toks), 2):
-            op, rhs = toks[k], toks[k + 1]
-            if op not in ("&", "|", "-"):
-                raise ValueError(f"bad operator {op!r} in {expr!r}")
-            acc = self._b.cohort_op(op, acc, self._cohort_node(rhs),
-                                    name=f"{name}[{(k + 1) // 2}]")
-        return acc
+    def _lower_cohort(self, tree, name: str) -> int:
+        """Lower a parsed ``CohortExpr`` onto ``cohort_op`` plan nodes.
+        Post-order, left-to-right — for legacy flat expressions the node
+        names ``name[1]``, ``name[2]``, ... match the old left-fold."""
+        counter = [0]
+
+        def lower(t) -> int:
+            if isinstance(t, CohortRef):
+                return self._cohort_node(t.name)
+            left = lower(t.left)
+            right = lower(t.right)
+            counter[0] += 1
+            return self._b.cohort_op(t.op, left, right,
+                                     name=f"{name}[{counter[0]}]")
+
+        return lower(tree)
 
     # -- plans ---------------------------------------------------------------
     def plan(self) -> Plan:
-        """The raw (unoptimized) plan built so far."""
-        return self._b.build()
+        """The raw (unoptimized) plan built so far.  Flatten outputs in
+        automatic ``keep`` mode that an extractor chained onto are demoted
+        from named outputs here — they stay the chaining point but stop
+        pinning the full flat schema, which is what lets ``optimize()``
+        prune unused dimension columns out of the join chain."""
+        raw = self._b.build()
+        drop = {nm for nm, keep in self._flatten_keep.items()
+                if keep is False or (keep is None and nm in self._chained)}
+        if drop:
+            raw = Plan(raw.nodes, tuple((n, i) for n, i in raw.outputs
+                                        if n not in drop))
+        return raw
 
     def optimized_plan(self, tables: Optional[Dict[str, ColumnarTable]] = None,
                        n_shards: int = 1) -> Plan:
@@ -459,4 +514,26 @@ def flow_rows_from_log(log: OperationLog) -> List[Dict[str, object]]:
         rows.append({"stage": stage, "subjects": n,
                      "removed": (prev - n) if prev is not None else 0})
         prev = n
+    return rows
+
+
+def column_audit_from_log(log: OperationLog) -> List[Dict[str, object]]:
+    """Per-stage column audit from an OperationLog alone: which columns each
+    executed plan node *read* (``required_columns``, stamped by the
+    optimizer's pruning pass) and which a pruned scan *dropped*
+    (``pruned_columns``) — the paper's data-flow flowchart extended from row
+    counts to column sets."""
+    rows: List[Dict[str, object]] = []
+    for e in log.entries:
+        if not e["op"].startswith("plan:"):
+            continue
+        p = e["params"]
+        if "required_columns" not in p and "pruned_columns" not in p:
+            continue
+        rows.append({
+            "stage": e["op"][len("plan:"):],
+            "rows_out": next(iter(e["outputs"].values())),
+            "required_columns": p.get("required_columns"),
+            "pruned_columns": p.get("pruned_columns"),
+        })
     return rows

@@ -27,9 +27,10 @@ import numpy as np
 from repro.core import flattening as _fl
 from repro.core import transformers as _tr
 from repro.core.cohort import Bitset
-from repro.core.columnar import ColumnarTable, is_null
+from repro.core.columnar import ColumnarTable
 from repro.core.events import make_events
 from repro.core.metadata import OperationLog
+from repro.study import expr as _expr
 from repro.study.plan import COHORT_OPS, Plan, STATS_OPS, TABLE_OPS
 
 __all__ = ["execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache"]
@@ -138,8 +139,8 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
                      "key_sum_out": _key_checksum(out, key)}
     if op == "slice_time":
         t = ins[0]
-        col = t.columns[node.get("col")]
-        out = t.filter((col >= node.get("lo")) & (col < node.get("hi")))
+        # the bounds are an Expr like any other predicate (col.between)
+        out = t.filter(_expr.node_predicate(node).evaluate(t))
         n_sel = out.count
         ksum_in = _key_checksum(out, node.get("col"))
         cap = node.get("capacity")
@@ -153,19 +154,13 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
                      "key_sum_out": _key_checksum(out, node.get("col"))}
     if op == "select":
         return ins[0].select(list(node.get("cols")))
-    if op == "drop_nulls":
-        return ins[0].drop_nulls(list(node.get("cols")))
-    if op == "value_filter":
-        allowed = jnp.asarray(np.asarray(node.get("codes"), np.int32))
-        return ins[0].filter(jnp.isin(ins[0].columns[node.get("col")], allowed))
-    if op == "fused_mask":
+    if op in ("predicate", "drop_nulls", "value_filter", "fused_mask"):
+        # every predicate-ish op re-expresses as an Expr; a fused_mask's
+        # accumulated conjuncts compile to ONE mask evaluation over the
+        # projected columns (expr.fused_predicate)
         t = ins[0]
-        mask = t.valid
-        for c in node.get("null_cols"):
-            mask = mask & ~is_null(t.columns[c])
-        for col, codes in node.get("filters"):
-            allowed = jnp.asarray(np.asarray(codes, np.int32))
-            mask = mask & jnp.isin(t.columns[col], allowed)
+        e = _expr.node_predicate(node)
+        mask = t.valid if e is None else e.mask(t)
         return ColumnarTable(t.columns, mask, mask.sum().astype(jnp.int32))
     if op == "dedupe":
         from repro.core.extraction import dedupe_by
@@ -350,9 +345,18 @@ def record_plan(plan: Plan, counts: Dict[int, int], log: OperationLog,
         ins = {f"#{j}:{plan.nodes[j].label()}": _N(host_counts[j])
                for j in node.inputs if j in host_counts}
         label = out_names.get(i, node.label())
-        params = {k: (v if isinstance(v, (int, float, str, bool, type(None)))
-                      else len(v))
-                  for k, v in node.params}
+        params = {}
+        for k, v in node.params:
+            if k in ("required_columns", "pruned_columns", "cols"):
+                params[k] = list(v)          # the column-audit story: record
+            elif k == "expr":                # what each stage read, legibly
+                params[k] = _expr.render_param(v)
+            elif k == "exprs":
+                params[k] = [_expr.render_param(e) for e in v]
+            elif isinstance(v, (int, float, str, bool, type(None))):
+                params[k] = v
+            else:
+                params[k] = len(v)
         params["engine"] = engine
         if stats and i in stats:
             params.update(stats[i])

@@ -1,5 +1,6 @@
-"""Plan rewrites: shared scans, fused masks, deferred compaction, join
-rewrites (capacity planning + partitioning-awareness), DCE.
+"""Plan rewrites: shared scans, fused masks, deferred compaction, column
+pruning through joins, join rewrites (capacity planning +
+partitioning-awareness), DCE.
 
 The passes encode the paper's three columnar properties (§3.4) at the *plan*
 level instead of inside each extractor:
@@ -7,11 +8,17 @@ level instead of inside each extractor:
   * ``merge_projections`` — all extractors reading one source share a single
     scan + a single union projection, so a study makes ONE pass over DCIR
     instead of one per extractor.
-  * ``fuse_masks`` — adjacent null-filter / value-filter nodes collapse into
-    one ``fused_mask`` node, executed as a single vectorized predicate (one
-    mask kernel per extractor branch instead of one per step).
+  * ``fuse_masks`` — adjacent predicate / null-filter / value-filter nodes
+    collapse into one ``fused_mask`` node, executed as a single vectorized
+    Expr conjunction (one mask evaluation per extractor branch instead of
+    one per step).
   * ``defer_compaction`` — compaction (the only materialization) is removed
     from plan interiors and appears exactly once per named table output.
+  * ``prune_columns`` — join-aware dead-column elimination: every node's
+    ``required_columns`` (Expr reads, join/exchange keys, conform/dedupe
+    column sets, projections) is propagated *backwards* through
+    lookup_join/expand_join/exchange into the star scans, and scans are
+    narrowed so unused dimension columns never enter the flatten join chain.
   * ``plan_capacities`` — join capacity planning from table statistics,
     host-side (the Spark driver sizing shuffle partitions): exact output
     sizes for ``expand_join``/``slice_time`` nodes, replacing trace-time
@@ -28,15 +35,17 @@ executor.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, FrozenSet, List, Mapping, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core.columnar import NULL_INT
+from repro.study import expr as _expr
 from repro.study.plan import JOIN_OPS, MASK_OPS, Node, Plan, PlanBuilder
 
 __all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction",
-           "plan_capacities", "prune_exchanges", "dce"]
+           "prune_columns", "plan_capacities", "prune_exchanges", "dce",
+           "available_columns", "required_columns"]
 
 # selects hanging off any of these get merged into one union projection
 _MERGE_UPSTREAM = frozenset({
@@ -109,31 +118,37 @@ def merge_projections(plan: Plan) -> Plan:
 
 
 # ---------------------------------------------------------------------------
-def _mask_params(node: Node) -> Tuple[Tuple[str, ...], Tuple]:
-    """(null_cols, value_filters) contribution of one mask-op node."""
+def _mask_params(node: Node) -> Tuple[Tuple[str, ...], Tuple, Tuple]:
+    """(null_cols, value_filters, exprs) contribution of one mask-op node."""
     if node.op == "drop_nulls":
-        return tuple(node.get("cols")), ()
+        return tuple(node.get("cols")), (), ()
     if node.op == "value_filter":
-        return (), ((node.get("col"), node.get("codes")),)
+        return (), ((node.get("col"), node.get("codes")),), ()
+    if node.op == "predicate":
+        return (), (), (node.get("expr"),)
     if node.op == "fused_mask":
-        return tuple(node.get("null_cols")), tuple(node.get("filters"))
+        return (tuple(node.get("null_cols")), tuple(node.get("filters")),
+                tuple(node.get("exprs") or ()))
     raise AssertionError(node.op)
 
 
 def fuse_masks(plan: Plan) -> Plan:
     """Collapse chains of mask-only nodes into single ``fused_mask`` nodes.
 
-    Every drop_nulls/value_filter is first normalized to a fused_mask; then a
-    fused_mask whose (sole-consumer) input is another fused_mask absorbs it.
-    Runs to fixpoint, so arbitrarily long mask chains become one node.
+    Every predicate/drop_nulls/value_filter is first normalized to a
+    fused_mask; then a fused_mask whose (sole-consumer) input is another
+    fused_mask absorbs it.  Runs to fixpoint, so arbitrarily long mask
+    chains become one node, executed as a single Expr conjunction (see
+    ``expr.fused_predicate``).
     """
     # normalize
     replace = {}
     for i, n in enumerate(plan.nodes):
         if n.op in MASK_OPS:
-            nulls, filters = _mask_params(n)
+            nulls, filters, exprs = _mask_params(n)
             replace[i] = Node("fused_mask", n.inputs,
-                              (("filters", filters), ("null_cols", nulls)))
+                              (("exprs", exprs), ("filters", filters),
+                               ("null_cols", nulls)))
     plan = _rebuild(plan, replace)
 
     while True:
@@ -149,11 +164,12 @@ def fuse_masks(plan: Plan) -> Plan:
             if (up.op != "fused_mask" or len(consumers[j]) != 1
                     or j in replace or j in out_ids):
                 continue
-            u_nulls, u_filters = _mask_params(up)
-            n_nulls, n_filters = _mask_params(n)
+            u_nulls, u_filters, u_exprs = _mask_params(up)
+            n_nulls, n_filters, n_exprs = _mask_params(n)
             nulls = u_nulls + tuple(c for c in n_nulls if c not in u_nulls)
             replace[i] = Node("fused_mask", up.inputs,
-                              (("filters", u_filters + n_filters),
+                              (("exprs", u_exprs + n_exprs),
+                               ("filters", u_filters + n_filters),
                                ("null_cols", nulls)))
             redirect[j] = i  # j had only this consumer; drop its definition
         if not replace:
@@ -209,8 +225,9 @@ def defer_compaction(plan: Plan) -> Plan:
 # row-preserving ops through which hash partitioning survives (masks don't
 # move rows between shards; joins keep left rows on their shard)
 _PART_PRESERVING = frozenset({
-    "select", "drop_nulls", "value_filter", "fused_mask", "dedupe",
-    "conform_events", "compact", "slice_time", "lookup_join", "expand_join",
+    "select", "predicate", "drop_nulls", "value_filter", "fused_mask",
+    "dedupe", "conform_events", "compact", "slice_time", "lookup_join",
+    "expand_join",
 })
 
 
@@ -240,6 +257,180 @@ def prune_exchanges(plan: Plan, n_shards: int = 1) -> Plan:
     if not redirect:
         return plan
     return _rebuild(plan, {}, redirect=redirect)
+
+
+# ---------------------------------------------------------------------------
+# column pruning through joins (the ROADMAP "join-aware DCE of flat columns")
+# ---------------------------------------------------------------------------
+# the standardized Event layout produced by conform_events (schema.FLAT_EVENT_
+# SCHEMA) — conform is a schema boundary, so requirements never propagate
+# through it
+_EVENT_COLS = frozenset({"patient_id", "category", "group_id", "value",
+                         "weight", "start", "end"})
+# ops whose output carries exactly their (single) input's column set
+_COLS_PRESERVING = frozenset({
+    "predicate", "drop_nulls", "value_filter", "fused_mask", "dedupe",
+    "compact", "exchange", "slice_time",
+})
+
+
+def _join_right_cols(node: Node, right_avail: FrozenSet[str]) -> Dict[str, str]:
+    """{output column name: right column name} contributed by a join's right
+    side (the right key folds into the left side and never surfaces)."""
+    prefix = node.get("prefix") or ""
+    rk = node.get("right_key")
+    return {prefix + c: c for c in right_avail if c != rk}
+
+
+def available_columns(plan: Plan) -> Dict[int, Optional[FrozenSet[str]]]:
+    """Forward dataflow: the column set each table node produces, where it is
+    statically known (``None`` = unknown).  ``scan_star`` nodes learn their
+    schema from the ``columns`` param ``contribute_flatten`` stamps."""
+    avail: Dict[int, Optional[FrozenSet[str]]] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op == "scan_star" and n.get("columns") is not None:
+            avail[i] = frozenset(n.get("columns"))
+        elif n.op == "select":
+            avail[i] = frozenset(n.get("cols"))
+        elif n.op == "conform_events":
+            avail[i] = _EVENT_COLS
+        elif n.op in _COLS_PRESERVING and n.inputs:
+            avail[i] = avail.get(n.inputs[0])
+        elif n.op in JOIN_OPS:
+            la, ra = avail.get(n.inputs[0]), avail.get(n.inputs[1])
+            avail[i] = (None if la is None or ra is None
+                        else la | frozenset(_join_right_cols(n, ra)))
+        elif n.op == "concat":
+            ins = [avail.get(j) for j in n.inputs]
+            avail[i] = ins[0] if ins and all(a == ins[0] for a in ins) else None
+        else:
+            avail[i] = None
+    return avail
+
+
+def required_columns(plan: Plan) -> Dict[int, Optional[FrozenSet[str]]]:
+    """Backward dataflow: the columns each table node must *provide* —
+    the union over its consumers of what they read (Expr columns, join and
+    exchange keys, conform/dedupe column sets, projections).  ``None`` means
+    "everything" (named outputs keep their full schema; opaque transforms
+    and exported event tables pin their inputs)."""
+    avail = available_columns(plan)
+    req: Dict[int, Optional[Set[str]]] = {}
+
+    def _push(j: int, cols: Optional[Set[str]]) -> None:
+        if cols is None:
+            req[j] = None
+        elif req.get(j, set()) is not None:
+            req[j] = req.get(j, set()) | set(cols)
+
+    for _, i in plan.outputs:
+        req[i] = None  # an output's schema is part of the study contract
+    for i in range(len(plan.nodes) - 1, -1, -1):
+        n = plan.nodes[i]
+        r = req.get(i, set())
+        if n.op in ("scan", "scan_star"):
+            continue
+        if n.op == "select":
+            # the projection itself declares what it reads; narrowing it
+            # would change its (possibly output-visible) schema
+            _push(n.inputs[0], set(n.get("cols")))
+        elif n.op in ("predicate", "drop_nulls", "value_filter", "fused_mask"):
+            e = _expr.node_predicate(n)
+            own = set() if e is None else set(e.required_columns())
+            _push(n.inputs[0], None if r is None else r | own)
+        elif n.op == "dedupe":
+            _push(n.inputs[0], None if r is None else r | set(n.get("keys")))
+        elif n.op == "compact":
+            _push(n.inputs[0], r)
+        elif n.op == "exchange":
+            _push(n.inputs[0], None if r is None else r | {n.get("key")})
+        elif n.op == "slice_time":
+            _push(n.inputs[0], None if r is None else r | {n.get("col")})
+        elif n.op == "conform_events":
+            need = {"patient_id", n.get("value_col"), n.get("start_col")}
+            need |= {c for c in (n.get("end_col"), n.get("group_col"),
+                                 n.get("weight_col")) if c}
+            _push(n.inputs[0], need)
+        elif n.op == "concat":
+            for j in n.inputs:
+                _push(j, r)
+        elif n.op in JOIN_OPS:
+            l_in, r_in = n.inputs
+            ra = avail.get(r_in)
+            if r is None or ra is None:
+                _push(l_in, None)
+                _push(r_in, None)
+                continue
+            right_named = _join_right_cols(n, ra)
+            from_right = {right_named[c] for c in r if c in right_named}
+            _push(r_in, from_right | {n.get("right_key")})
+            _push(l_in, {c for c in r if c not in right_named}
+                  | {n.get("left_key")})
+        elif n.op == "transform":
+            for j in n.inputs:
+                _push(j, None)  # registered fns are opaque: keep everything
+        elif n.op == "cohort_from_events":
+            # the event table leaves the program as Cohort.events — full schema
+            _push(n.inputs[0], None)
+        elif n.op == "featurize":
+            if len(n.inputs) > 1:
+                _push(n.inputs[1], None)  # the patients table is host-visible
+        # cohort_op / flow consume bitsets, not tables
+    return {i: (None if c is None else frozenset(c))
+            for i, c in req.items()}
+
+
+# nodes worth stamping with their required-column set for the OperationLog
+# audit (the paper's "what did each stage read" data-flow story)
+_AUDIT_OPS = frozenset({"lookup_join", "expand_join", "exchange",
+                        "slice_time", "scan_star"})
+
+
+def prune_columns(plan: Plan) -> Plan:
+    """Join-aware column pruning: narrow every statically-known scan to the
+    columns some consumer actually reads.
+
+    The union projection of all extractors/featurize/conform consumers is
+    propagated backwards through ``lookup_join``/``expand_join``/``exchange``
+    into the star scans (``required_columns``); each prunable ``scan_star``
+    gets a ``select`` of only the required columns inserted directly above
+    it, so unused dimension columns are dropped before the flatten join
+    chain ever materializes them.  Audited nodes are stamped with
+    ``required_columns`` (and pruning selects with ``pruned_columns``) so
+    the OperationLog records what each stage read.
+    """
+    avail = available_columns(plan)
+    req = required_columns(plan)
+
+    prune: Dict[int, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op != "scan_star" or avail.get(i) is None:
+            continue
+        r = req.get(i, frozenset())
+        if r is None:
+            continue
+        keep = r & avail[i]
+        if keep and keep < avail[i]:
+            prune[i] = (tuple(sorted(keep)), tuple(sorted(avail[i] - keep)))
+    if not prune and not any(
+            n.op in _AUDIT_OPS and req.get(i) is not None
+            for i, n in enumerate(plan.nodes)):
+        return plan
+
+    b = PlanBuilder()
+    new_id: Dict[int, int] = {}
+    for i, n in enumerate(plan.nodes):
+        params = dict(n.params)
+        if n.op in _AUDIT_OPS and req.get(i) is not None:
+            params["required_columns"] = tuple(sorted(req[i]))
+        nid = b.add(n.op, tuple(new_id[j] for j in n.inputs), **params)
+        if i in prune:
+            keep, dropped = prune[i]
+            nid = b.add("select", (nid,), cols=keep, pruned_columns=dropped)
+        new_id[i] = nid
+    for name, i in plan.outputs:
+        b.set_output(name, new_id[i])
+    return b.build()
 
 
 # ---------------------------------------------------------------------------
@@ -368,17 +559,20 @@ def dce(plan: Plan) -> Plan:
 
 # ---------------------------------------------------------------------------
 def optimize(plan: Plan, tables: Optional[Mapping] = None,
-             n_shards: int = 1) -> Plan:
+             n_shards: int = 1, prune_cols: bool = True) -> Plan:
     """Default rewrite pipeline (executor calls this unless told not to).
 
     ``tables`` (concrete run-time tables) enables host-side capacity
     planning; ``n_shards`` informs exchange pruning (off-mesh, every exchange
-    is the identity and drops).
+    is the identity and drops); ``prune_cols=False`` disables join-aware
+    column pruning (the benchmark baseline).
     """
     plan = merge_projections(plan)
     plan = fuse_masks(plan)
     plan = defer_compaction(plan)
     plan = prune_exchanges(plan, n_shards=n_shards)
+    if prune_cols:
+        plan = prune_columns(plan)
     if tables:
         # The planner's exact sizes are GLOBAL row counts.  Under shard_map
         # each shard would allocate that full size, so sharded expand_joins

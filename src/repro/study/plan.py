@@ -24,9 +24,10 @@ Node vocabulary (executor semantics in ``executor.py``):
   exchange(t, key)                  -> hash-partition shuffle (identity off-mesh)
   slice_time(t, col, lo, hi)        -> temporal slice, bounded per-slice capacity
   select(cols)                      -> column projection       (metadata only)
-  drop_nulls(cols)                  -> null mask               (mask algebra)
-  value_filter(col, codes)          -> whitelist mask          (mask algebra)
-  fused_mask(null_cols, filters)    -> optimizer-fused single predicate
+  predicate(expr)                   -> typed Expr row filter   (mask algebra)
+  drop_nulls(cols)                  -> null mask (sugar: emits a predicate)
+  value_filter(col, codes)          -> whitelist mask (sugar: emits a predicate)
+  fused_mask(null_cols,filters,exprs)-> optimizer-fused single predicate
   dedupe(keys)                      -> DISTINCT over keys (sort + run heads)
   conform_events(...)               -> Event-schema conformance
   compact()                         -> the one materialization per output
@@ -46,8 +47,8 @@ __all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS",
 
 # ops whose value is a ColumnarTable
 TABLE_OPS = frozenset({
-    "scan", "scan_star", "select", "drop_nulls", "value_filter", "fused_mask",
-    "dedupe", "conform_events", "compact", "transform", "concat",
+    "scan", "scan_star", "select", "predicate", "drop_nulls", "value_filter",
+    "fused_mask", "dedupe", "conform_events", "compact", "transform", "concat",
     "lookup_join", "expand_join", "exchange", "slice_time",
 })
 # flattening joins (left input 0, right input 1)
@@ -57,7 +58,9 @@ STATS_OPS = frozenset({"lookup_join", "expand_join", "exchange", "slice_time"})
 # ops whose value is a packed subject bitset
 COHORT_OPS = frozenset({"cohort_from_events", "cohort_op"})
 # mask-only ops the optimizer may fuse into one vectorized predicate
-MASK_OPS = frozenset({"drop_nulls", "value_filter"})
+# (drop_nulls/value_filter survive as raw op names for hand-built plans; the
+# PlanBuilder sugar lowers both to typed ``predicate`` nodes)
+MASK_OPS = frozenset({"predicate", "drop_nulls", "value_filter"})
 # ops executed host-side, after the jitted portion
 HOST_OPS = frozenset({"featurize", "flow"})
 
@@ -177,12 +180,16 @@ class PlanBuilder:
         return self.add("scan", source=source)
 
     def scan_star(self, source: str, star: Optional[str] = None,
-                  partitioned_on: Optional[str] = None) -> int:
+                  partitioned_on: Optional[str] = None,
+                  columns: Optional[Sequence[str]] = None) -> int:
         """Scan a raw (normalized) star-schema table by name.  ``star`` tags
         the sub-database for plan introspection; ``partitioned_on`` declares a
-        pre-existing hash partitioning (lets the optimizer prune exchanges)."""
+        pre-existing hash partitioning (lets the optimizer prune exchanges);
+        ``columns`` declares the table's schema, which is what lets the
+        optimizer's column-pruning pass narrow the scan statically."""
         return self.add("scan_star", source=source, star=star,
-                        partitioned_on=partitioned_on)
+                        partitioned_on=partitioned_on,
+                        columns=None if columns is None else tuple(columns))
 
     def lookup_join(self, left: int, right: int, left_key: str,
                     right_key: str, prefix: str = "") -> int:
@@ -225,12 +232,26 @@ class PlanBuilder:
     def select(self, t: int, cols: Sequence[str]) -> int:
         return self.add("select", (t,), cols=tuple(sorted(set(cols))))
 
+    def predicate(self, t: int, expr: Any, label: Optional[str] = None) -> int:
+        """Typed row filter: ``expr`` is an ``expr.Expr`` (or its serialized
+        param form), evaluated as one vectorized mask over the table."""
+        from repro.study.expr import as_param
+
+        return self.add("predicate", (t,), expr=as_param(expr), name=label)
+
     def drop_nulls(self, t: int, cols: Sequence[str]) -> int:
-        return self.add("drop_nulls", (t,), cols=tuple(cols))
+        """Null filter — sugar for a conjunction-of-``not_null`` predicate."""
+        from repro.study.expr import all_of, col as _col
+
+        return self.predicate(t, all_of(*[_col(c).not_null() for c in cols]),
+                              label="drop_nulls")
 
     def value_filter(self, t: int, col: str, codes: Sequence[int]) -> int:
-        return self.add("value_filter", (t,), col=col,
-                        codes=tuple(int(c) for c in codes))
+        """Whitelist filter — sugar for an ``isin`` predicate."""
+        from repro.study.expr import col as _col
+
+        return self.predicate(t, _col(col).isin(int(c) for c in codes),
+                              label="value_filter")
 
     def dedupe(self, t: int, keys: Sequence[str]) -> int:
         return self.add("dedupe", (t,), keys=tuple(keys))

@@ -239,7 +239,16 @@ def test_flatten_extract_one_plan(dcir):
     # flatten node instead of scanning a pre-flattened env table
     ops = res.plan.count_ops()
     assert ops.get("lookup_join", 0) == 3 and "scan" not in ops
-    assert ops["select"] == 1                  # merged union projection
+    # one merged union projection downstream of the joins, plus the pruning
+    # selects the optimizer inserts above the star scans (the flat table is
+    # auto-demoted from the outputs once extractors chain onto it)
+    union = [n for n in res.plan.nodes if n.op == "select"
+             and not n.get("pruned_columns")]
+    assert len(union) == 1
+    prunes = [n for n in res.plan.nodes if n.op == "select"
+              and n.get("pruned_columns")]
+    assert prunes and any("gender" in n.get("pruned_columns")
+                          for n in prunes)   # IR_BEN narrows to its join key
     flat, _ = flatten_star(DCIR_SCHEMA, dcir)
     for name, ex in [("drugs", drug_dispenses()), ("acts", medical_acts_dcir())]:
         _assert_tables_equal(ex(flat), res.events[name])

@@ -60,22 +60,24 @@ def test_shared_scan_single_projection():
 
 
 def test_mask_fusion_collapses_chains():
-    # drug_dispenses(codes=...) is a private drop_nulls -> value_filter chain:
-    # it must fuse into ONE node carrying both the null mask and the
-    # whitelist.  bio/enc share one null-mask node (two consumers), which must
-    # stay shared — computed once — not be duplicated into both branches.
+    # drug_dispenses(codes=...) is a private not-null -> isin predicate
+    # chain: it must fuse into ONE node carrying both conjuncts.  bio/enc
+    # share one null-mask node (two consumers), which must stay shared —
+    # computed once — not be duplicated into both branches.
     exts = [("drugs", drug_dispenses(codes=list(range(20)))),
             ("bio", biology_acts()), ("enc", practitioner_encounters())]
     raw = _study(exts).plan()
-    n_masks_raw = sum(raw.count_ops().get(k, 0)
-                      for k in ("drop_nulls", "value_filter"))
+    n_masks_raw = raw.count_ops().get("predicate", 0)
     opt = optimize(raw)
     assert n_masks_raw == 5      # drugs: 2; bio/enc: shared null + 2 filters
     assert opt.count_ops()["fused_mask"] == 4
-    assert not any(n.op in ("drop_nulls", "value_filter") for n in opt.nodes)
+    assert not any(n.op in ("predicate", "drop_nulls", "value_filter")
+                   for n in opt.nodes)
     both = [n for n in opt.nodes if n.op == "fused_mask"
-            and n.get("filters") and n.get("null_cols")]
-    assert len(both) == 1        # the fused drugs chain
+            and len(n.get("exprs")) == 2]
+    assert len(both) == 1        # the fused drugs chain (not-null & isin)
+    tags = sorted(e[0] for e in both[0].get("exprs"))
+    assert tags == ["isin", "notnull"]
     shared = [i for i, n in enumerate(opt.nodes) if n.op == "fused_mask"
               and len(opt.consumers()[i]) == 2]
     assert len(shared) == 1      # bio/enc's common null mask
