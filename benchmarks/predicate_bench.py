@@ -1,0 +1,159 @@
+"""Fused-predicate benchmark: mask-pass bytes, jnp mask algebra vs the
+Pallas Expr->bitset kernel.
+
+The acceptance metric mirrors ``pruning_bench``'s byte-proxy style: for every
+``fused_mask``/``predicate`` node of the optimized plan, the bytes one mask
+pass moves through HBM —
+
+  * **jnp engine**:   read each required column once + the validity mask,
+                      write a bool mask column (1 byte/row) that downstream
+                      consumers re-read;
+  * **pallas engine**: identical column reads (one fused pass), write the
+                      packed uint32 bitset (1 *bit*/row) + per-block
+                      popcounts.
+
+Column reads are equal by construction (PR 3 already fused the conjunction),
+so the delta is the mask materialization itself: 8x smaller on the output
+side, and what feeds the cohort bitset algebra directly.  The CI gate fails
+if the kernel path does not beat the jnp path on these bytes for every case.
+Wall-clock for both engines is reported too — honestly: on CPU the kernel
+runs in *interpret mode* and is slower; the byte model is the TPU story.
+
+Run:  PYTHONPATH=src python benchmarks/predicate_bench.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _timeit(fn) -> float:
+    import jax
+
+    t0 = time.time()
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out))
+    return time.time() - t0
+
+
+def _mask_pass_bytes(plan, tables, block: int) -> Dict[str, Dict[str, int]]:
+    """Per-predicate-node byte accounting over the actually-executed plan
+    (table capacities come from an eager jnp evaluation, like the join-inflow
+    proxy in pruning_bench).  ``block`` is the pallas plan's stamped bitset
+    block (the jnp plan walked here carries no layout stamps)."""
+    from repro.study.executor import run_plan_body
+    from repro.study.expr import node_predicate
+    from repro.study.plan import PREDICATE_OPS
+
+    env = {s: tables[s] for s in plan.sources()}
+    vals, _, _ = run_plan_body(plan, env, 0, "xla", predicate_engine="jnp")
+    per: Dict[str, Dict[str, int]] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op not in PREDICATE_OPS:
+            continue
+        e = node_predicate(n)
+        if e is None:
+            continue
+        t = vals[n.inputs[0]]
+        cap = t.capacity
+        col_bytes = sum(np.asarray(t.columns[c]).itemsize * cap
+                        for c in e.required_columns() if c in t.columns)
+        reads = col_bytes + cap          # + validity mask (1 byte/row)
+        grid = -(-cap // block)
+        per[f"#{i}:{n.op}"] = {
+            "rows": cap,
+            "jnp_bytes": reads + cap,                        # bool mask out
+            "pallas_bytes": reads + 4 * ((cap + 31) // 32)   # bitset out
+            + 4 * grid,                                      # popcounts
+        }
+    return per
+
+
+def run(n_patients: int = 2_000, seed: int = 13, repeats: int = 3,
+        block: int = 1024) -> List[Dict]:
+    from repro.core import (
+        DCIR_SCHEMA, PMSI_MCO_SCHEMA, drug_dispenses, medical_acts_dcir,
+        medical_acts_pmsi,
+    )
+    from repro.data.synthetic import SyntheticConfig, generate_dcir, \
+        generate_pmsi
+    from repro.study import Study, assign_engines, execute
+    import dataclasses
+
+    cfg = SyntheticConfig(n_patients=n_patients, seed=seed)
+    cases = [
+        ("DCIR", DCIR_SCHEMA, generate_dcir(cfg),
+         [("drugs", drug_dispenses()), ("acts", medical_acts_dcir())]),
+        ("PMSI-MCO", PMSI_MCO_SCHEMA, generate_pmsi(cfg),
+         [("hacts", medical_acts_pmsi())]),
+    ]
+    rows: List[Dict] = []
+    for name, schema, tables, exts in cases:
+        def build():
+            s = Study(n_patients=cfg.n_patients).flatten(schema,
+                                                         name=schema.name)
+            for out_name, ex in exts:
+                s.extract(dataclasses.replace(ex, source=schema.name),
+                          name=out_name)
+            return s
+
+        plans = {
+            eng: build().optimized_plan(tables=dict(tables),
+                                        predicate_engine=eng)
+            for eng in ("jnp", "pallas")
+        }
+        # re-stamp the pallas plan with the requested bitset block (the
+        # optimizer pipeline stamps DEFAULT_BLOCK)
+        plans["pallas"] = assign_engines(plans["pallas"],
+                                         predicate_engine="pallas",
+                                         block=block)
+        n_masks = plans["pallas"].count_ops().get("fused_mask", 0)
+        # byte accounting walks the jnp-stamped plan (same fused_mask set;
+        # its eager evaluation must not run the interpret-mode kernel), with
+        # the pallas plan's block size for the popcount term
+        per = _mask_pass_bytes(plans["jnp"], dict(tables), block=block)
+        b_jnp = sum(d["jnp_bytes"] for d in per.values())
+        b_pal = sum(d["pallas_bytes"] for d in per.values())
+
+        vals = {eng: execute(p, dict(tables)) for eng, p in plans.items()}
+        parity = "pass"
+        for out_name, _ in exts:
+            a = vals["jnp"][plans["jnp"].output_ids[out_name]].to_numpy()
+            b = vals["pallas"][plans["pallas"].output_ids[out_name]].to_numpy()
+            if set(a) != set(b) or any((a[k] != b[k]).any() for k in a):
+                parity = "FAIL"
+
+        def timed(eng):
+            fn = lambda: execute(plans[eng], dict(tables))
+            fn()                                    # warm the jit cache
+            return min(_timeit(fn) for _ in range(repeats))
+
+        rows.append({
+            "database": name,
+            "fused_masks": n_masks,
+            "mask_bytes_jnp": b_jnp,
+            "mask_bytes_pallas": b_pal,
+            "reduction": round(1 - b_pal / max(b_jnp, 1), 4),
+            "per_mask": per,
+            "jnp_s": round(timed("jnp"), 5),
+            "pallas_s": round(timed("pallas"), 5),
+            "interpret_mode": __import__("jax").default_backend() != "tpu",
+            "parity": parity,
+        })
+    return rows
+
+
+def main() -> None:
+    import json
+
+    print(json.dumps(run(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -115,6 +115,39 @@ def bench_pruning(n_patients: int = 2_000, repeats: int = 3) -> None:
                 f"({r['join_bytes_pruned']} >= {r['join_bytes_unpruned']})")
 
 
+def bench_predicate(n_patients: int = 2_000, repeats: int = 3) -> None:
+    """Fused-predicate gate: the Pallas Expr->bitset kernel must beat the
+    jnp mask algebra on mask-pass bytes (bitset out = 1 bit/row vs bool out
+    = 1 byte/row; column reads identical) for every fused_mask of the
+    pipeline, with bit-identical extracted events.  Emits
+    ``BENCH_predicate.json``."""
+    import json
+
+    from benchmarks import predicate_bench
+
+    rows = predicate_bench.run(n_patients=n_patients, repeats=repeats)
+    with open("BENCH_predicate.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _emit(
+            f"predicate.{r['database']}",
+            r["pallas_s"] * 1e6,
+            f"jnp_us={r['jnp_s'] * 1e6:.1f} "
+            f"mask_bytes={r['mask_bytes_pallas']}/{r['mask_bytes_jnp']} "
+            f"reduction={r['reduction']} masks={r['fused_masks']} "
+            f"parity={r['parity']}",
+        )
+        if r["parity"] != "pass":
+            raise SystemExit(
+                f"predicate.{r['database']}: jnp/pallas event parity FAILED "
+                "— the bitset kernel diverged from the jnp mask path")
+        if r["mask_bytes_pallas"] >= r["mask_bytes_jnp"]:
+            raise SystemExit(
+                f"predicate.{r['database']}: fused kernel did not reduce "
+                f"mask-pass bytes ({r['mask_bytes_pallas']} >= "
+                f"{r['mask_bytes_jnp']})")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -155,12 +188,14 @@ def main() -> None:
         bench_table1()
         bench_flatten_plan(n_patients=500, repeats=2)
         bench_pruning(n_patients=500, repeats=2)
+        bench_predicate(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
         return
     bench_table1()
     bench_flattening()
     bench_flatten_plan()
     bench_pruning()
+    bench_predicate()
     bench_fig3()
     bench_study()
     bench_roofline()

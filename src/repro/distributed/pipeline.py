@@ -118,7 +118,8 @@ _PLAN_CACHE = {}
 
 
 def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
-                         axis_name: str = "data", engine: str = "xla"):
+                         axis_name: str = "data", engine: str = "xla",
+                         predicate_engine: str | None = None):
     """Execute a study ``Plan`` shard-local over a mesh ``data`` axis.
 
     Requirement (same as ``transformers.exposures_sharded``): the flat tables
@@ -170,7 +171,10 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
     mesh_key = (tuple(mesh.axis_names),
                 tuple(mesh.shape[a] for a in mesh.axis_names),
                 tuple(d.id for d in np.ravel(mesh.devices)))
-    key = (plan.key(), n_patients, engine, mesh_key, axis_name)
+    from repro.kernels.predicate import resolve_engine
+
+    peng = resolve_engine(predicate_engine, engine)
+    key = (plan.key(), n_patients, engine, peng, mesh_key, axis_name)
     fn = _PLAN_CACHE.get(key)
     if fn is None:
         def body(cols, valids):
@@ -179,7 +183,7 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
                      for s, c in cols.items()}
             vals, counts, stats = run_plan_body(
                 plan, local, n_patients, engine, axis_name=axis_name,
-                n_shards=n)
+                n_shards=n, predicate_engine=peng)
             t_out = {i: (dict(vals[i].columns), vals[i].valid)
                      for i in ev_ids}
             b_out = {i: jax.lax.psum(vals[i], axis_name) for i in cohort_ids}

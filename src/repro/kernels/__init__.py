@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import jax
+
+
+def default_interpret() -> bool:
+    """Single source of truth for the kernels' interpret default: the Pallas
+    kernels are TPU-targeted and run in interpret mode on any other backend
+    (the container-CI case).  Every kernel module resolves ``interpret=None``
+    through this helper so the fleet can never disagree."""
+    return jax.default_backend() != "tpu"

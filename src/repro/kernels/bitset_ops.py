@@ -40,10 +40,25 @@ def _make_kernel(op: int):
 
 
 def bitset_op_popcount(a: jax.Array, b: jax.Array, op: str, block: int = DEFAULT_BLOCK,
-                       interpret: bool = True):
-    """Fused ``(a OP b, popcount(a OP b) per block)``; n % block == 0."""
+                       interpret: bool | None = None):
+    """Fused ``(a OP b, popcount(a OP b) per block)``.
+
+    Ragged tails are zero-padded to the block quantum (zero words contribute
+    no population, and every OPS entry maps 0 OP 0 -> 0, so padded words
+    never leak into counts); the padded tail is returned — callers slice.
+    ``interpret`` defaults by backend (interpret mode off-TPU).
+    """
+    from repro.kernels import default_interpret
+
+    interpret = default_interpret() if interpret is None else interpret
     n = a.shape[0]
-    assert n % block == 0, (n, block)
+    if n == 0:
+        return jnp.zeros((0,), a.dtype), jnp.zeros((0,), jnp.int32)
+    pad = (-n) % block
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad,), a.dtype)])
+        b = jnp.concatenate([b, jnp.zeros((pad,), b.dtype)])
+        n += pad
     grid = (n // block,)
     return pl.pallas_call(
         _make_kernel(OPS[op]),

@@ -57,15 +57,27 @@ def _kernel(vals_ref, mask_ref, out_ref, cnt_ref):
 
 
 def filter_compact_blocks(vals: jax.Array, mask: jax.Array, block: int = DEFAULT_BLOCK,
-                          interpret: bool = True):
+                          interpret: bool | None = None):
     """Block-compact ``vals`` by ``mask``.
 
     Returns ``(block_vals, block_counts)`` with ``block_vals[g]`` holding the
     ``block_counts[g]`` surviving rows of grid block ``g`` at its front.
-    Input length must be a multiple of ``block`` (wrapper pads).
+    Ragged tails are padded with dropped (mask=False) rows — padded rows can
+    never surface in a compacted block; the padded tail is returned (callers
+    slice).  ``interpret`` defaults by backend (interpret mode off-TPU).
     """
+    from repro.kernels import default_interpret
+
+    interpret = default_interpret() if interpret is None else interpret
     n = vals.shape[0]
-    assert n % block == 0, (n, block)
+    if n == 0:
+        return jnp.zeros((0,), vals.dtype), jnp.zeros((0,), jnp.int32)
+    pad = (-n) % block
+    if pad:
+        vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+        mask = jnp.concatenate([mask.astype(bool),
+                                jnp.zeros((pad,), bool)])
+        n += pad
     grid = (n // block,)
     return pl.pallas_call(
         _kernel,

@@ -12,11 +12,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret  # noqa: F401 (shared resolver)
 from repro.kernels import filter_compact as _fc
 from repro.kernels import segment_scan as _ss
 from repro.kernels import bitset_ops as _bo
 from repro.kernels import hash_partition as _hp
 from repro.kernels import swa_attention as _swa
+from repro.kernels.predicate import predicate_bitset  # noqa: F401 (re-export;
+# pads + jits itself — see kernels/predicate.py for the Expr->bitset codegen)
 
 __all__ = [
     "default_interpret",
@@ -25,11 +28,8 @@ __all__ = [
     "bitset_op",
     "hash_partition_plan",
     "flash_attention",
+    "predicate_bitset",
 ]
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jax.Array, mult: int, fill=0):
@@ -50,6 +50,8 @@ def filter_compact(vals: jax.Array, mask: jax.Array, block: int = 256,
     """
     interpret = default_interpret() if interpret is None else interpret
     n = vals.shape[0]
+    if n == 0:
+        return vals, jnp.int32(0)
     vp = _pad_to(vals, block)
     mp = _pad_to(mask.astype(bool), block, fill=False)
     blocks, counts = _fc.filter_compact_blocks(vp, mp, block=block, interpret=interpret)
@@ -81,10 +83,12 @@ def bitset_op(a: jax.Array, b: jax.Array, op: str, block: int = 1024,
     """Fused bitwise op + total popcount; returns (words, count)."""
     interpret = default_interpret() if interpret is None else interpret
     n = a.shape[0]
-    ap = _pad_to(a, block)
-    bp = _pad_to(b, block)
-    words, partial = _bo.bitset_op_popcount(ap, bp, op, block=block, interpret=interpret)
-    return words[:n], partial.sum()
+    if n == 0:
+        return a, jnp.int32(0)
+    # the kernel pads ragged tails itself; returns the padded words
+    words, partial = _bo.bitset_op_popcount(a, b, op, block=block,
+                                            interpret=interpret)
+    return words[:n], partial.sum().astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("n_dest", "block", "interpret"))

@@ -1,0 +1,327 @@
+"""Pallas TPU kernel: fused Expr-predicate evaluation to a packed bitset.
+
+The extractor hot path (paper §4, Fig. 2) is one mask pass per scan branch.
+PR 3 fused each branch's predicate chain into a single ``Expr`` conjunction,
+but the executor still evaluated it as jnp mask algebra — one HBM round-trip
+per column reference plus a materialized bool column (1 byte/row) that every
+consumer re-reads.  This module compiles the serialized Expr tree into ONE
+Pallas kernel:
+
+  * one grid pass over the projected columns — every leaf op (comparisons,
+    arithmetic, ``isin`` via sorted-membership rank compares, sentinel null
+    tests, ``&``/``|``/``~``) evaluates entirely in VMEM;
+  * the output is a **packed uint32 bitset** (1 bit/row, 8x smaller than the
+    bool column) plus per-block popcounts: the mask pass itself never writes
+    a bool column, and the words use the ``cohort.Bitset`` layout so they
+    feed the bitset algebra (``bitset_ops``) directly.  (The executor still
+    unpacks to the table's bool validity for downstream nodes — fused
+    bitwise ops; bitset-native validity end-to-end is a ROADMAP item.)
+
+Codegen is trace-time: ``compile_predicate`` walks the hashable param tree
+(``expr.Expr.to_param`` form — the exact object plan nodes carry) and emits a
+closure of jnp ops; ``pallas_call`` then lowers that closure per block.  The
+``isin`` whitelists are static plan params, so they are sorted host-side and
+streamed to every block; membership is the two monotone rank reductions
+``rank(<= x) > rank(< x)`` — broadcast compares + sums, the TPU-native
+formulation (no gather), exactly equivalent to sorted-array binary search.
+
+Grid blocks are independent (`parallel` semantics); the wrapper pads ragged
+tails with invalid rows, so any capacity works.
+"""
+from __future__ import annotations
+
+import functools
+import operator as _op
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401 (TPU lowering)
+
+from repro.kernels import default_interpret
+
+__all__ = [
+    "DEFAULT_BLOCK", "MAX_ISIN_VALUES", "PREDICATE_ENGINES", "compilable",
+    "compile_predicate", "default_interpret", "predicate_bitset",
+    "resolve_engine",
+]
+
+DEFAULT_BLOCK = 1024           # rows per grid block; must be a multiple of 32
+
+# sorted-membership is a (block x whitelist) broadcast in VMEM: at the
+# default block, 1024 values ~ 4 MB of intermediate — comfortably resident;
+# bigger whitelists fall back to the jnp engine instead of risking VMEM
+# exhaustion on a real TPU (interpret-mode CI would never catch it)
+MAX_ISIN_VALUES = 1024
+
+# mirrors columnar.NULL_INT (kernels stay import-light: no repro.core deps,
+# same convention as filter_compact's _INT_MIN)
+_NULL_INT = -2_147_483_648 + 1
+
+_CMP = {"==": _op.eq, "!=": _op.ne, "<": _op.lt, "<=": _op.le,
+        ">": _op.gt, ">=": _op.ge}
+_ARITH = {"+": _op.add, "-": _op.sub, "*": _op.mul,
+          "//": _op.floordiv, "%": _op.mod}
+
+# param tags whose value is boolean — the kernel packs bits, so the tree ROOT
+# must be one of these (interior arithmetic is unrestricted)
+_BOOL_TAGS = frozenset({"cmp", "bool", "not", "isin", "isnull", "notnull"})
+
+# ---------------------------------------------------------------------------
+# engine selection
+# ---------------------------------------------------------------------------
+PREDICATE_ENGINES = ("jnp", "pallas", "auto")
+
+
+def resolve_engine(predicate_engine: Optional[str] = None,
+                   engine: str = "xla") -> str:
+    """Resolve the predicate engine for ``fused_mask``/``predicate`` nodes.
+
+    ``"jnp"``/``"pallas"`` are explicit; ``"auto"`` (or ``None``) picks the
+    Pallas bitset kernel when the global executor engine is already
+    ``"pallas"`` or when running on a real TPU backend — the same
+    backend-derived choice ``ops.default_interpret`` makes for compaction —
+    and falls back to jnp mask algebra otherwise.
+    """
+    pe = predicate_engine or "auto"
+    if pe not in PREDICATE_ENGINES:
+        raise ValueError(f"predicate engine must be one of {PREDICATE_ENGINES}, "
+                         f"got {pe!r}")
+    if pe != "auto":
+        return pe
+    if engine == "pallas" or jax.default_backend() == "tpu":
+        return "pallas"
+    return "jnp"
+
+
+def _isin_sizes(p, out: list) -> None:
+    if not isinstance(p, tuple) or not p:
+        return
+    if p[0] == "isin":
+        out.append(len(p[2]))
+        _isin_sizes(p[1], out)
+        return
+    for x in p[1:]:
+        _isin_sizes(x, out)
+
+
+def compilable(expr_param) -> bool:
+    """True when the serialized Expr can compile to the bitset kernel:
+
+      * the root must be boolean-valued (packing bits of an arithmetic value
+        would be meaningless), and
+      * every ``isin`` whitelist must fit the VMEM membership budget
+        (``MAX_ISIN_VALUES``; larger lists would blow the in-kernel
+        broadcast on a real TPU).
+
+    Non-compilable exprs stay on the jnp engine (``assign_engines`` stamps
+    them back; the executor double-checks)."""
+    if not (isinstance(expr_param, tuple) and len(expr_param) > 0
+            and expr_param[0] in _BOOL_TAGS):
+        return False
+    sizes: list = []
+    _isin_sizes(expr_param, sizes)
+    return all(s <= MAX_ISIN_VALUES for s in sizes)
+
+
+# ---------------------------------------------------------------------------
+# Expr-param -> kernel-body codegen
+# ---------------------------------------------------------------------------
+def _is_null(v: jax.Array) -> jax.Array:
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        return jnp.isnan(v)
+    return v == jnp.asarray(_NULL_INT, v.dtype)
+
+
+def _sorted_member(x: jax.Array, tbl: jax.Array) -> jax.Array:
+    """Sorted-membership: x ∈ tbl iff rank(tbl <= x) > rank(tbl < x).
+
+    Two monotone rank reductions over the sorted whitelist — broadcast
+    compares + row sums, all VPU work in VMEM (binary search without the
+    gathers TPUs lack).  NaN probes compare false both ways -> non-member,
+    matching ``jnp.isin``.
+    """
+    rd = jnp.promote_types(x.dtype, tbl.dtype)
+    xb = x.astype(rd)[:, None]
+    tb = tbl.astype(rd)[None, :]
+    le = (tb <= xb).sum(axis=1)
+    lt = (tb < xb).sum(axis=1)
+    return le > lt
+
+
+def compile_predicate(expr_param: Tuple):
+    """Compile a serialized Expr (``Expr.to_param`` nested tuples) into
+    ``(columns, isin_tables, eval_fn)``.
+
+    ``columns`` is the ordered tuple of column operands (the kernel's
+    projected inputs); ``isin_tables`` holds one sorted (tail-padded with its
+    own max, so padding can never match) numpy whitelist per ``isin`` leaf;
+    ``eval_fn(env, tables)`` maps {column: block array} + table blocks to the
+    boolean mask block — pure jnp, traceable inside a Pallas kernel body.
+    """
+    columns: List[str] = []
+    tables: List[np.ndarray] = []
+
+    def walk(p) -> Callable:
+        tag = p[0]
+        if tag == "col":
+            name = p[1]
+            if name not in columns:
+                columns.append(name)
+            return lambda env, tbls: env[name]
+        if tag == "lit":
+            v = p[1]
+            return lambda env, tbls: v
+        if tag == "cmp":
+            f, l, r = _CMP[p[1]], walk(p[2]), walk(p[3])
+            return lambda env, tbls: f(l(env, tbls), r(env, tbls))
+        if tag == "arith":
+            f, l, r = _ARITH[p[1]], walk(p[2]), walk(p[3])
+            return lambda env, tbls: f(l(env, tbls), r(env, tbls))
+        if tag == "bool":
+            l, r = walk(p[2]), walk(p[3])
+            if p[1] == "and":
+                return lambda env, tbls: l(env, tbls) & r(env, tbls)
+            return lambda env, tbls: l(env, tbls) | r(env, tbls)
+        if tag == "not":
+            x = walk(p[1])
+            return lambda env, tbls: ~x(env, tbls)
+        if tag in ("isnull", "notnull"):
+            x = walk(p[1])
+            if tag == "notnull":
+                return lambda env, tbls: ~_is_null(jnp.asarray(x(env, tbls)))
+            return lambda env, tbls: _is_null(jnp.asarray(x(env, tbls)))
+        if tag == "isin":
+            x = walk(p[1])
+            vals = p[2]
+            if not vals:   # empty whitelist matches nothing
+                return lambda env, tbls: jnp.zeros(
+                    jnp.shape(jnp.asarray(x(env, tbls))), bool)
+            dt = np.float32 if any(isinstance(c, float) for c in vals) \
+                else np.int32
+            tbl = np.sort(np.asarray(vals, dt))
+            pad = (-tbl.size) % 8
+            if pad:        # lane-align; max-duplicate padding never matches new values
+                tbl = np.concatenate([tbl, np.full(pad, tbl[-1], dt)])
+            ti = len(tables)
+            tables.append(tbl)
+            return lambda env, tbls: _sorted_member(
+                jnp.asarray(x(env, tbls)), tbls[ti])
+        raise ValueError(f"unknown Expr param tag {tag!r}")
+
+    if expr_param[0] not in _BOOL_TAGS:
+        raise ValueError(
+            f"pallas predicate engine needs a boolean-valued expression root, "
+            f"got tag {expr_param[0]!r} (use the jnp engine)")
+    eval_fn = walk(expr_param)
+    return tuple(columns), tuple(tables), eval_fn
+
+
+# ---------------------------------------------------------------------------
+# kernel + wrapper
+# ---------------------------------------------------------------------------
+def _make_kernel(eval_fn: Callable, names: Sequence[str], n_tables: int):
+    def _kernel(*refs):
+        col_refs = refs[:len(names)]
+        tbl_refs = refs[len(names):len(names) + n_tables]
+        valid_ref = refs[len(names) + n_tables]
+        words_ref, pc_ref = refs[-2:]
+
+        env = {nm: r[...] for nm, r in zip(names, col_refs)}
+        tbls = [r[...] for r in tbl_refs]
+        m = eval_fn(env, tbls) & (valid_ref[...] != 0)
+
+        B = m.shape[0]
+        lanes = jax.lax.broadcasted_iota(jnp.uint32, (B // 32, 32), 1)
+        bits = m.reshape(B // 32, 32).astype(jnp.uint32) << lanes
+        words_ref[...] = bits.sum(axis=1).astype(jnp.uint32)
+        pc_ref[0] = m.astype(jnp.int32).sum()
+
+    return _kernel
+
+
+def predicate_bitset_blocks(expr_param: Tuple, cols: Dict[str, jax.Array],
+                            valid: jax.Array, block: int = DEFAULT_BLOCK,
+                            interpret: Optional[bool] = None):
+    """One fused pass: evaluate ``expr_param`` over ``cols`` AND ``valid``.
+
+    Returns ``(words, popcounts)`` — the packed uint32 bitset (n/32 words)
+    and the per-block popcounts.  Input length must be a multiple of
+    ``block`` (``predicate_bitset`` pads); ``block`` a multiple of 32.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    assert block % 32 == 0, block
+    n = valid.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    names, tables, eval_fn = compile_predicate(expr_param)
+    missing = [nm for nm in names if nm not in cols]
+    if missing:
+        raise KeyError(f"predicate reads absent column(s) {missing}")
+
+    in_specs = [pl.BlockSpec((block,), lambda g: (g,)) for _ in names]
+    in_specs += [pl.BlockSpec((int(t.size),), lambda g: (0,)) for t in tables]
+    in_specs += [pl.BlockSpec((block,), lambda g: (g,))]
+    operands = ([cols[nm] for nm in names]
+                + [jnp.asarray(t) for t in tables]
+                + [valid.astype(jnp.int8)])
+    return pl.pallas_call(
+        _make_kernel(eval_fn, names, len(tables)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block // 32,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // 32,), jnp.uint32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+def _pad_to(x: jax.Array, mult: int, fill=0):
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((p,), fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("expr_param", "block", "interpret"))
+def _predicate_bitset_jit(columns: Dict[str, jax.Array], valid: jax.Array, *,
+                          expr_param: Tuple, block: int,
+                          interpret: Optional[bool]):
+    n = valid.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32), jnp.int32(0)
+    cols = {nm: _pad_to(c, block) for nm, c in columns.items()}
+    vp = _pad_to(valid.astype(jnp.int8), block)
+    words, pc = predicate_bitset_blocks(expr_param, cols, vp, block=block,
+                                        interpret=interpret)
+    return words[: (n + 31) // 32], pc.sum().astype(jnp.int32)
+
+
+def predicate_bitset(columns: Dict[str, jax.Array], valid: jax.Array, *,
+                     expr_param: Tuple, block: int = DEFAULT_BLOCK,
+                     interpret: Optional[bool] = None):
+    """Fused predicate -> packed bitset over a table's columns.
+
+    Returns ``(words, count)``: ``words`` is the ceil(n/32)-word uint32
+    bitset of ``valid & expr`` (row i lives at word i//32, bit i%32 — the
+    ``cohort.Bitset`` layout, so the result drops straight into the cohort
+    algebra kernel), ``count`` the total surviving rows.  Columns are padded
+    to the block quantum with invalid rows.  Only the columns the expression
+    reads are passed into the jit boundary — handing in a whole wide table
+    costs nothing extra and never retraces on unrelated columns.
+    """
+    names, _, _ = compile_predicate(expr_param)
+    missing = [nm for nm in names if nm not in columns]
+    if missing:
+        raise KeyError(f"predicate reads absent column(s) {missing}")
+    return _predicate_bitset_jit({nm: columns[nm] for nm in names}, valid,
+                                 expr_param=expr_param, block=block,
+                                 interpret=interpret)

@@ -15,7 +15,7 @@ from repro.study.expr import (
 )
 from repro.study.optimizer import (
     optimize, merge_projections, fuse_masks, defer_compaction,
-    prune_columns, plan_capacities, prune_exchanges, dce,
+    prune_columns, plan_capacities, prune_exchanges, dce, assign_engines,
     available_columns, required_columns,
 )
 from repro.study.executor import execute, TRANSFORMS, jit_cache_info, clear_jit_cache
@@ -30,7 +30,7 @@ __all__ = [
     "fused_predicate", "node_predicate", "parse_cohort_expr",
     "optimize", "merge_projections", "fuse_masks", "defer_compaction",
     "prune_columns", "plan_capacities", "prune_exchanges", "dce",
-    "available_columns", "required_columns",
+    "assign_engines", "available_columns", "required_columns",
     "execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache",
     "Study", "StudyResult", "contribute_flatten", "contribute_flatten_sliced",
     "flow_rows_from_log", "column_audit_from_log",

@@ -357,7 +357,8 @@ class Study:
         return raw
 
     def optimized_plan(self, tables: Optional[Dict[str, ColumnarTable]] = None,
-                       n_shards: int = 1) -> Plan:
+                       n_shards: int = 1, predicate_engine: str = "auto",
+                       engine: str = "xla") -> Plan:
         """Optimize the built plan.  ``tables`` (concrete run-time tables)
         lets the capacity planner size join outputs from table statistics —
         the planned capacities depend on table *content* (join-key
@@ -372,11 +373,15 @@ class Study:
         needs_stats = any(n.op in ("expand_join", "slice_time")
                           and n.get("capacity") is None for n in raw.nodes)
         if tables and needs_stats:
-            return _optimizer.optimize(raw, tables=tables, n_shards=n_shards)
-        key = (raw.key(), n_shards)
+            return _optimizer.optimize(raw, tables=tables, n_shards=n_shards,
+                                       predicate_engine=predicate_engine,
+                                       engine=engine)
+        key = (raw.key(), n_shards, predicate_engine, engine)
         if self._opt_cache is not None and self._opt_cache[0] == key:
             return self._opt_cache[1]
-        opt = _optimizer.optimize(raw, n_shards=n_shards)
+        opt = _optimizer.optimize(raw, n_shards=n_shards,
+                                  predicate_engine=predicate_engine,
+                                  engine=engine)
         self._opt_cache = (key, opt)
         return opt
 
@@ -384,13 +389,23 @@ class Study:
     def run(self, tables: Optional[Dict[str, ColumnarTable]] = None,
             engine: str = "xla", optimize: bool = True, jit: bool = True,
             log: Optional[OperationLog] = None, mesh=None,
-            axis_name: str = "data") -> StudyResult:
+            axis_name: str = "data",
+            predicate_engine: Optional[str] = None) -> StudyResult:
         """Optimize, execute (optionally under ``shard_map`` on ``mesh``),
-        realize cohorts/flow/features, and auto-log provenance."""
+        realize cohorts/flow/features, and auto-log provenance.
+
+        ``predicate_engine`` ("jnp" | "pallas" | "auto"/None) picks how
+        predicate/fused_mask nodes evaluate: jnp mask algebra or the Pallas
+        Expr->bitset kernel.  "auto" follows the backend (and ``engine=
+        "pallas"``); the optimizer stamps the resolved choice on each node
+        so the OperationLog records it.
+        """
         env = dict(self._sources)
         env.update(tables or {})
         n_shards = mesh.shape[axis_name] if mesh is not None else 1
-        plan = (self.optimized_plan(tables=env, n_shards=n_shards)
+        plan = (self.optimized_plan(tables=env, n_shards=n_shards,
+                                    predicate_engine=predicate_engine or "auto",
+                                    engine=engine)
                 if optimize else self.plan())
         log = log if log is not None else OperationLog()
 
@@ -400,13 +415,15 @@ class Study:
 
             vals, counts, join_stats = execute_plan_sharded(
                 plan, env, self.n_patients, mesh, axis_name=axis_name,
-                engine=engine)
+                engine=engine, predicate_engine=predicate_engine)
             _executor.record_plan(plan, counts, log, engine,
-                                  stats=join_stats)
+                                  stats=join_stats,
+                                  predicate_engine=predicate_engine)
         else:
             vals = _executor.execute(plan, env, n_patients=self.n_patients,
                                      engine=engine, log=log, jit=jit,
-                                     stats_sink=join_stats)
+                                     stats_sink=join_stats,
+                                     predicate_engine=predicate_engine)
         for i, d in join_stats.items():
             d.setdefault("stage", plan.nodes[i].label())
 

@@ -30,8 +30,10 @@ from repro.core.cohort import Bitset
 from repro.core.columnar import ColumnarTable
 from repro.core.events import make_events
 from repro.core.metadata import OperationLog
+from repro.kernels import predicate as _pk
 from repro.study import expr as _expr
-from repro.study.plan import COHORT_OPS, Plan, STATS_OPS, TABLE_OPS
+from repro.study.plan import (COHORT_OPS, PREDICATE_OPS, Plan, STATS_OPS,
+                              TABLE_OPS)
 
 __all__ = ["execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache"]
 
@@ -93,7 +95,7 @@ def _key_checksum(t: ColumnarTable, key: str) -> jax.Array:
 
 def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
                engine: str, axis_name: Optional[str] = None,
-               n_shards: int = 1):
+               n_shards: int = 1, predicate_engine: str = "jnp"):
     op = node.op
     if op in ("scan", "scan_star"):
         src = node.get("source")
@@ -154,13 +156,29 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
                      "key_sum_out": _key_checksum(out, node.get("col"))}
     if op == "select":
         return ins[0].select(list(node.get("cols")))
-    if op in ("predicate", "drop_nulls", "value_filter", "fused_mask"):
+    if op in PREDICATE_OPS:
         # every predicate-ish op re-expresses as an Expr; a fused_mask's
         # accumulated conjuncts compile to ONE mask evaluation over the
-        # projected columns (expr.fused_predicate)
+        # projected columns (expr.fused_predicate).  The node's stamped
+        # engine (``assign_engines``) — or the run-level predicate engine —
+        # picks between jnp mask algebra and the Pallas Expr->bitset kernel.
         t = ins[0]
         e = _expr.node_predicate(node)
-        mask = t.valid if e is None else e.mask(t)
+        if e is None:
+            return ColumnarTable(t.columns, t.valid,
+                                 t.valid.sum().astype(jnp.int32))
+        eng = node.get("engine") or predicate_engine
+        param = e.to_param()
+        if eng == "pallas" and _pk.compilable(param):
+            words, cnt = _pk.predicate_bitset(
+                t.columns, t.valid, expr_param=param,
+                block=node.get("bitset_block") or _pk.DEFAULT_BLOCK)
+            # the unpack below is bitwise ops XLA fuses into consumers; the
+            # packed words (1 bit/row) are what crossed HBM, and they drop
+            # straight into the cohort bitset algebra / compaction stitch
+            mask = Bitset.to_mask(words, t.capacity)
+            return ColumnarTable(t.columns, mask, cnt)
+        mask = e.mask(t)
         return ColumnarTable(t.columns, mask, mask.sum().astype(jnp.int32))
     if op == "dedupe":
         from repro.core.extraction import dedupe_by
@@ -239,12 +257,14 @@ def keep_ids(plan: Plan) -> Tuple[int, ...]:
 
 def run_plan_body(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
                   engine: str, axis_name: Optional[str] = None,
-                  n_shards: int = 1):
+                  n_shards: int = 1, predicate_engine: Optional[str] = None):
     """Pure traced body: node id -> value for every array-valued node, plus
     per-node counts and per-join FlatteningStats dicts.  Reused verbatim by
     ``distributed.pipeline`` under ``shard_map`` (``axis_name``/``n_shards``
     make exchange nodes run real collectives there; off-mesh they are the
-    identity)."""
+    identity).  ``predicate_engine`` is the fallback for predicate nodes the
+    optimizer did not stamp (``"auto"``/None resolve by backend)."""
+    peng = _pk.resolve_engine(predicate_engine, engine)
     vals: Dict[int, Any] = {}
     counts: Dict[int, jax.Array] = {}
     stats: Dict[int, Dict[str, jax.Array]] = {}
@@ -252,7 +272,7 @@ def run_plan_body(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
         node = plan.nodes[i]
         ins = [vals[j] for j in node.inputs]
         out = _eval_node(node, ins, env, n_patients, engine, axis_name,
-                         n_shards)
+                         n_shards, predicate_engine=peng)
         if node.op in STATS_OPS:
             out, stats[i] = out
         vals[i] = out
@@ -260,14 +280,17 @@ def run_plan_body(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
     return vals, counts, stats
 
 
-def _jitted_runner(plan: Plan, n_patients: int, engine: str) -> Callable:
-    key = (plan.key(), n_patients, engine)
+def _jitted_runner(plan: Plan, n_patients: int, engine: str,
+                   predicate_engine: Optional[str] = None) -> Callable:
+    peng = _pk.resolve_engine(predicate_engine, engine)
+    key = (plan.key(), n_patients, engine, peng)
     fn = _JIT_CACHE.get(key)
     if fn is None:
         keep = keep_ids(plan)
 
         def body(env):
-            vals, counts, stats = run_plan_body(plan, env, n_patients, engine)
+            vals, counts, stats = run_plan_body(plan, env, n_patients, engine,
+                                                predicate_engine=peng)
             # counts leave as ONE stacked vector: a single host transfer for
             # provenance instead of one device sync per node.
             ids = tuple(sorted(counts))
@@ -288,7 +311,8 @@ def _host_stats(stats) -> Dict[int, Dict[str, int]]:
 def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
             engine: str = "xla", log: Optional[OperationLog] = None,
             jit: bool = True,
-            stats_sink: Optional[Dict[int, Dict[str, int]]] = None
+            stats_sink: Optional[Dict[int, Dict[str, int]]] = None,
+            predicate_engine: Optional[str] = None
             ) -> Dict[int, Any]:
     """Evaluate every array-valued node of ``plan`` over ``tables``.
 
@@ -298,7 +322,9 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
     job — they need realized Cohort objects (see ``api.Study.run``).
     Per-join ``FlatteningStats`` are recorded into ``log`` automatically and,
     when ``stats_sink`` is given, copied into it as host ints keyed by node
-    id.
+    id.  ``predicate_engine`` ("jnp" | "pallas" | "auto"/None) picks how
+    un-stamped predicate nodes evaluate — jnp mask algebra or the Pallas
+    Expr->bitset kernel; nodes the optimizer stamped keep their engine.
     """
     missing = [s for s in plan.sources() if s not in tables]
     if missing:
@@ -306,11 +332,13 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
                        f"{sorted(tables)}")
     env = {src: tables[src] for src in plan.sources()}
     if jit:
-        vals, counts_vec, stats = _jitted_runner(plan, n_patients, engine)(env)
+        vals, counts_vec, stats = _jitted_runner(
+            plan, n_patients, engine, predicate_engine)(env)
         counts = dict(zip(traced_ids(plan),
                           (int(c) for c in np.asarray(counts_vec))))
     else:
-        vals, counts_dev, stats = run_plan_body(plan, env, n_patients, engine)
+        vals, counts_dev, stats = run_plan_body(
+            plan, env, n_patients, engine, predicate_engine=predicate_engine)
         vals = {i: vals[i] for i in keep_ids(plan)}
         counts = {i: int(c) for i, c in counts_dev.items()}
     if log is not None or stats_sink is not None:
@@ -318,7 +346,8 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
         # pay it when someone consumes the stats
         host_stats = _host_stats(stats)
         if log is not None:
-            record_plan(plan, counts, log, engine, stats=host_stats)
+            record_plan(plan, counts, log, engine, stats=host_stats,
+                        predicate_engine=predicate_engine)
         if stats_sink is not None:
             stats_sink.update(host_stats)
     return vals
@@ -326,13 +355,18 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
 
 def record_plan(plan: Plan, counts: Dict[int, int], log: OperationLog,
                 engine: str,
-                stats: Optional[Dict[int, Dict[str, int]]] = None) -> None:
+                stats: Optional[Dict[int, Dict[str, int]]] = None,
+                predicate_engine: Optional[str] = None) -> None:
     """One OperationLog entry per executed node — automatic provenance.
     ``counts``/``stats`` must already be host ints (see ``execute`` / the
     sharded path in ``distributed.pipeline``: counts cross as one stacked
     vector).  Join/exchange nodes carry their FlatteningStats fields
     (rows_in/out, matched, overflow, null_keys, key checksums) in the entry
-    params — the paper's no-loss audit, for free on every flattened study."""
+    params — the paper's no-loss audit, for free on every flattened study.
+    ``predicate_engine`` must match the executing call so un-stamped
+    predicate nodes log the engine they actually ran (stamped nodes carry
+    their own)."""
+    peng = _pk.resolve_engine(predicate_engine, engine)
     out_names = {i: name for name, i in plan.outputs}
     host_counts = {i: int(c) for i, c in counts.items()}
 
@@ -357,7 +391,18 @@ def record_plan(plan: Plan, counts: Dict[int, int], log: OperationLog,
                 params[k] = v
             else:
                 params[k] = len(v)
-        params["engine"] = engine
+        if params.get("engine") is None:
+            # nodes the optimizer stamped (predicate engine, explicit compact
+            # engine) keep their own; un-stamped predicate nodes log what the
+            # executor's fallback actually ran (mirroring _eval_node's
+            # compilability check); everything else records the global engine
+            if node.op in PREDICATE_OPS:
+                e = _expr.node_predicate(node)
+                params["engine"] = (
+                    "pallas" if peng == "pallas" and e is not None
+                    and _pk.compilable(e.to_param()) else "jnp")
+            else:
+                params["engine"] = engine
         if stats and i in stats:
             params.update(stats[i])
         log.record(op=f"plan:{node.op}:{label}", inputs=ins,

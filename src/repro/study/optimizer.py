@@ -40,12 +40,14 @@ from typing import Dict, FrozenSet, List, Mapping, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.columnar import NULL_INT
+from repro.kernels import predicate as _pk
 from repro.study import expr as _expr
-from repro.study.plan import JOIN_OPS, MASK_OPS, Node, Plan, PlanBuilder
+from repro.study.plan import (JOIN_OPS, MASK_OPS, PREDICATE_OPS, Node, Plan,
+                              PlanBuilder)
 
 __all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction",
            "prune_columns", "plan_capacities", "prune_exchanges", "dce",
-           "available_columns", "required_columns"]
+           "assign_engines", "available_columns", "required_columns"]
 
 # selects hanging off any of these get merged into one union projection
 _MERGE_UPSTREAM = frozenset({
@@ -534,6 +536,46 @@ def plan_capacities(plan: Plan, tables: Mapping, round_to: int = 64,
 
 
 # ---------------------------------------------------------------------------
+def assign_engines(plan: Plan, predicate_engine: str = "auto",
+                   engine: str = "xla",
+                   block: Optional[int] = None) -> Plan:
+    """Stamp every predicate-evaluating node with its chosen engine and, for
+    the Pallas path, the bitset layout (block quantum + word dtype).
+
+    The stamp is what the executor obeys (run-level ``predicate_engine`` is
+    only the fallback for un-stamped plans), and because node params flow
+    into ``record_plan`` verbatim, the ``OperationLog`` audit records *which*
+    engine and layout each mask pass actually used — the same legibility
+    story as ``required_columns``/``pruned_columns``.  Exprs whose root is
+    not boolean-valued (not kernel-compilable) are stamped ``jnp``.
+    """
+    resolved = _pk.resolve_engine(predicate_engine, engine)
+    block = int(block or _pk.DEFAULT_BLOCK)
+    replace: Dict[int, Node] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op not in PREDICATE_OPS:
+            continue
+        e = _expr.node_predicate(n)
+        eng = resolved
+        if eng == "pallas" and (e is None or not _pk.compilable(e.to_param())):
+            eng = "jnp"
+        p = dict(n.params)
+        p["engine"] = eng
+        if eng == "pallas":
+            p["bitset_block"] = block
+            p["bitset_word"] = "uint32"
+        else:
+            p.pop("bitset_block", None)
+            p.pop("bitset_word", None)
+        node = Node(n.op, n.inputs, tuple(sorted(p.items())))
+        if node != n:
+            replace[i] = node
+    if not replace:
+        return plan
+    return _rebuild(plan, replace)
+
+
+# ---------------------------------------------------------------------------
 def dce(plan: Plan) -> Plan:
     """Drop nodes unreachable from any named output."""
     live = set()
@@ -559,13 +601,16 @@ def dce(plan: Plan) -> Plan:
 
 # ---------------------------------------------------------------------------
 def optimize(plan: Plan, tables: Optional[Mapping] = None,
-             n_shards: int = 1, prune_cols: bool = True) -> Plan:
+             n_shards: int = 1, prune_cols: bool = True,
+             predicate_engine: str = "auto", engine: str = "xla") -> Plan:
     """Default rewrite pipeline (executor calls this unless told not to).
 
     ``tables`` (concrete run-time tables) enables host-side capacity
     planning; ``n_shards`` informs exchange pruning (off-mesh, every exchange
     is the identity and drops); ``prune_cols=False`` disables join-aware
-    column pruning (the benchmark baseline).
+    column pruning (the benchmark baseline); ``predicate_engine``/``engine``
+    feed the engine-assignment pass that stamps predicate nodes with their
+    evaluation engine + bitset layout.
     """
     plan = merge_projections(plan)
     plan = fuse_masks(plan)
@@ -573,6 +618,8 @@ def optimize(plan: Plan, tables: Optional[Mapping] = None,
     plan = prune_exchanges(plan, n_shards=n_shards)
     if prune_cols:
         plan = prune_columns(plan)
+    plan = assign_engines(plan, predicate_engine=predicate_engine,
+                          engine=engine)
     if tables:
         # The planner's exact sizes are GLOBAL row counts.  Under shard_map
         # each shard would allocate that full size, so sharded expand_joins

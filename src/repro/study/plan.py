@@ -27,7 +27,9 @@ Node vocabulary (executor semantics in ``executor.py``):
   predicate(expr)                   -> typed Expr row filter   (mask algebra)
   drop_nulls(cols)                  -> null mask (sugar: emits a predicate)
   value_filter(col, codes)          -> whitelist mask (sugar: emits a predicate)
-  fused_mask(null_cols,filters,exprs)-> optimizer-fused single predicate
+  fused_mask(null_cols,filters,exprs)-> optimizer-fused single predicate,
+                                       evaluated by the stamped engine (jnp
+                                       mask algebra | pallas bitset kernel)
   dedupe(keys)                      -> DISTINCT over keys (sort + run heads)
   conform_events(...)               -> Event-schema conformance
   compact()                         -> the one materialization per output
@@ -43,7 +45,7 @@ import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 __all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS",
-           "JOIN_OPS", "STATS_OPS"]
+           "JOIN_OPS", "STATS_OPS", "PREDICATE_OPS"]
 
 # ops whose value is a ColumnarTable
 TABLE_OPS = frozenset({
@@ -61,6 +63,10 @@ COHORT_OPS = frozenset({"cohort_from_events", "cohort_op"})
 # (drop_nulls/value_filter survive as raw op names for hand-built plans; the
 # PlanBuilder sugar lowers both to typed ``predicate`` nodes)
 MASK_OPS = frozenset({"predicate", "drop_nulls", "value_filter"})
+# predicate-evaluating ops the executor routes through a predicate engine
+# ("jnp" mask algebra or the "pallas" Expr->bitset kernel); the optimizer's
+# ``assign_engines`` pass stamps each with its chosen engine + bitset layout
+PREDICATE_OPS = MASK_OPS | frozenset({"fused_mask"})
 # ops executed host-side, after the jitted portion
 HOST_OPS = frozenset({"featurize", "flow"})
 

@@ -75,6 +75,63 @@ def test_bitset_sweep(n, op):
     assert int(c) == int(rc)
 
 
+# -- ragged / degenerate edge cases (wrapper + kernel-level padding) ----------
+@pytest.mark.parametrize("n", [0, 63, 64, 65, 255, 256, 257])
+@pytest.mark.parametrize("kind", ["empty", "all_kept", "all_dropped", "mixed"])
+def test_filter_compact_edges(n, kind):
+    vals = jnp.asarray(RNG.integers(-10**6, 10**6, n), jnp.int32)
+    mask = {"empty": jnp.zeros(n, bool),
+            "all_kept": jnp.ones(n, bool),
+            "all_dropped": jnp.zeros(n, bool),
+            "mixed": jnp.asarray(RNG.random(n) < 0.5)}[kind]
+    out, cnt = ops.filter_compact(vals, mask, block=64, interpret=True)
+    expected = np.asarray(vals)[np.asarray(mask)]
+    assert int(cnt) == len(expected)
+    assert (np.asarray(out)[: len(expected)] == expected).all()
+
+
+@pytest.mark.parametrize("n", [0, 1, 31, 1023, 1024, 1025])
+def test_bitset_op_ragged_and_degenerate(n):
+    """Kernel-level ragged-tail padding: no block-multiple assert, popcounts
+    unpolluted by the zero-padded tail."""
+    from repro.kernels import bitset_ops as bo
+
+    a = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, n, dtype=np.uint32))
+    for op in ("and", "or", "andnot", "xor"):
+        w, c = ops.bitset_op(a, b, op, interpret=True)
+        rw, rc = ref.bitset_op_ref(a, b, op)
+        assert w.shape == (n,)
+        assert (np.asarray(w) == np.asarray(rw)).all()
+        assert int(c) == int(rc)
+        if n:  # kernel entry point directly (padded tail returned)
+            wk, pk = bo.bitset_op_popcount(a, b, op, interpret=True)
+            assert (np.asarray(wk)[:n] == np.asarray(rw)).all()
+            assert int(np.asarray(pk).sum()) == int(rc)
+
+
+def test_kernel_interpret_defaults_follow_backend():
+    """interpret=None resolves by backend in every kernel module (no more
+    hardcoded interpret=True entry points), through the ONE shared helper."""
+    import repro.kernels as K
+    from repro.kernels import bitset_ops as bo
+    from repro.kernels import filter_compact as fc
+    from repro.kernels import predicate as pk
+
+    on_cpu = jax.default_backend() != "tpu"
+    assert K.default_interpret() == on_cpu
+    assert ops.default_interpret is K.default_interpret
+    assert pk.default_interpret is K.default_interpret
+    # callable without interpret= on any backend
+    v = jnp.arange(64, dtype=jnp.int32)
+    m = jnp.ones(64, bool)
+    out, cnt = fc.filter_compact_blocks(v, m, block=64)
+    assert int(cnt[0]) == 64 and (np.asarray(out) == np.asarray(v)).all()
+    w, p = bo.bitset_op_popcount(v.astype(jnp.uint32),
+                                 v.astype(jnp.uint32), "and", block=64)
+    assert (np.asarray(w) == np.asarray(v)).all()
+
+
 # -- hash partition ---------------------------------------------------------------
 @pytest.mark.parametrize("n,block,n_dest", [(2048, 512, 8), (512, 128, 16),
                                             (1000, 256, 4)])
