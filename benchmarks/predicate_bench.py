@@ -5,12 +5,13 @@ The acceptance metric mirrors ``pruning_bench``'s byte-proxy style: for every
 ``fused_mask``/``predicate`` node of the optimized plan, the bytes one mask
 pass moves through HBM —
 
-  * **jnp engine**:   read each required column once + the validity mask,
-                      write a bool mask column (1 byte/row) that downstream
-                      consumers re-read;
-  * **pallas engine**: identical column reads (one fused pass), write the
-                      packed uint32 bitset (1 *bit*/row) + per-block
-                      popcounts.
+  * **jnp engine**:   read each required column once + the packed validity
+                      words, materialize a bool mask column (1 byte/row)
+                      that the pack-at-the-boundary then consumes;
+  * **pallas engine**: identical column reads (one fused pass), read the
+                      packed validity words, write the packed uint32 bitset
+                      (1 *bit*/row) + per-block popcounts — the bool column
+                      never exists.
 
 Column reads are equal by construction (PR 3 already fused the conjunction),
 so the delta is the mask materialization itself: 8x smaller on the output
@@ -64,7 +65,9 @@ def _mask_pass_bytes(plan, tables, block: int) -> Dict[str, Dict[str, int]]:
         cap = t.capacity
         col_bytes = sum(np.asarray(t.columns[c]).itemsize * cap
                         for c in e.required_columns() if c in t.columns)
-        reads = col_bytes + cap          # + validity mask (1 byte/row)
+        # + packed validity words (1 bit/row — table validity is a bitset
+        # for BOTH engines since the bitset-native redesign)
+        reads = col_bytes + 4 * ((cap + 31) // 32)
         grid = -(-cap // block)
         per[f"#{i}:{n.op}"] = {
             "rows": cap,

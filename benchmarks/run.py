@@ -148,6 +148,39 @@ def bench_predicate(n_patients: int = 2_000, repeats: int = 3) -> None:
                 f"{r['mask_bytes_jnp']})")
 
 
+def bench_bitset(n_patients: int = 2_000, repeats: int = 3) -> None:
+    """Bitset-native validity gate: the packed-word table layout must shrink
+    the end-to-end mask-path validity bytes (predicate -> cohort ->
+    compaction) vs the seed's bool-column baseline, with bit-identical
+    extracted events across the jnp/pallas predicate engines.  Emits
+    ``BENCH_bitset.json``."""
+    import json
+
+    from benchmarks import bitset_bench
+
+    rows = bitset_bench.run(n_patients=n_patients, repeats=repeats)
+    with open("BENCH_bitset.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _emit(
+            f"bitset.{r['database']}",
+            r["pallas_s"] * 1e6,
+            f"jnp_us={r['jnp_s'] * 1e6:.1f} "
+            f"mask_bytes={r['mask_bytes_bitset']}/{r['mask_bytes_bool']} "
+            f"reduction={r['reduction']} nodes={r['mask_path_nodes']} "
+            f"parity={r['parity']}",
+        )
+        if r["parity"] != "pass":
+            raise SystemExit(
+                f"bitset.{r['database']}: jnp/pallas event parity FAILED "
+                "— bitset-native validity diverged between mask engines")
+        if r["mask_bytes_bitset"] >= r["mask_bytes_bool"]:
+            raise SystemExit(
+                f"bitset.{r['database']}: packed validity did not reduce "
+                f"mask-path bytes ({r['mask_bytes_bitset']} >= "
+                f"{r['mask_bytes_bool']})")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -189,6 +222,7 @@ def main() -> None:
         bench_flatten_plan(n_patients=500, repeats=2)
         bench_pruning(n_patients=500, repeats=2)
         bench_predicate(n_patients=500, repeats=2)
+        bench_bitset(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
         return
     bench_table1()
@@ -196,6 +230,7 @@ def main() -> None:
     bench_flatten_plan()
     bench_pruning()
     bench_predicate()
+    bench_bitset()
     bench_fig3()
     bench_study()
     bench_roofline()

@@ -1,0 +1,112 @@
+"""Packed row-validity bitset: ONE layout shared by the whole stack.
+
+The canonical representation of row validity (and cohort subject membership)
+is a packed ``uint32`` word array: row/subject ``i`` lives at word ``i // 32``,
+bit ``i % 32`` (LSB-first).  This is the layout the Pallas predicate kernel
+emits (``kernels/predicate``), the layout the fused bitset-algebra kernel
+consumes (``kernels/bitset_ops``), the layout ``cohort.Bitset`` has always
+used for subject sets, and — since the bitset-native validity redesign — the
+layout ``ColumnarTable.valid`` carries end-to-end.
+
+Invariant: bits at positions >= the logical length are always ZERO ("tail
+bits clear").  Every producer below maintains it; word-wise consumers (AND /
+OR / ANDNOT, popcount) rely on it so padded tail words never leak into
+counts.
+
+Why one module: ``columnar`` cannot import ``cohort`` (cycle), and the
+kernels stay import-light, so the layout primitives live here and everything
+else delegates.  ``unpack`` is the *only* word->bool(capacity,) expansion in
+the library — tests instrument it to assert the hot predicate->cohort->
+compaction path never expands validity back to a bool column.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "WORD_BITS", "n_words", "pack", "unpack", "unpack_np", "count",
+    "first_n", "bit_at", "is_packed",
+]
+
+WORD_BITS = 32
+
+
+def n_words(n_bits: int) -> int:
+    """Words needed to hold ``n_bits`` bits."""
+    return (int(n_bits) + WORD_BITS - 1) // WORD_BITS
+
+
+def is_packed(valid) -> bool:
+    """True when ``valid`` is a packed word array (vs a per-row bool mask).
+
+    The discriminator is the dtype: packed validity is always ``uint32``;
+    per-row masks are bool (or any other dtype, coerced to bool).
+    """
+    return getattr(valid, "dtype", None) == jnp.uint32
+
+
+def pack(mask: jax.Array) -> jax.Array:
+    """Pack a ``(n,) bool`` row mask into ``ceil(n/32)`` uint32 words.
+
+    Tail bits beyond ``n`` are zero (the invariant word-wise consumers rely
+    on).
+    """
+    n = mask.shape[0]
+    pad = (-n) % WORD_BITS
+    m = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(-1, WORD_BITS)
+    weights = jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return (m * weights).sum(axis=1, dtype=jnp.uint32)
+
+
+def unpack(words: jax.Array, n_bits: int) -> jax.Array:
+    """Expand packed words back to a ``(n_bits,) bool`` row mask.
+
+    This is the compatibility hop for consumers that genuinely need a
+    per-row mask (sorts, segment folds, host exports).  The hot path never
+    calls it — tests monkeypatch this function to count expansions.
+    """
+    bits = words[:, None] >> jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :]
+    return (bits & 1).astype(bool).reshape(-1)[:n_bits]
+
+
+def unpack_np(words: np.ndarray, n_bits: int) -> np.ndarray:
+    """Host-side ``unpack`` (numpy, for ``to_numpy``/IO/capacity planning)."""
+    w = np.asarray(words, np.uint32)
+    bits = (w[:, None] >> np.arange(WORD_BITS, dtype=np.uint32)[None, :]) & 1
+    return bits.astype(bool).reshape(-1)[:n_bits]
+
+
+def count(words: jax.Array) -> jax.Array:
+    """Total population count (scalar int32)."""
+    return jax.lax.population_count(words).sum(dtype=jnp.int32)
+
+
+def first_n(cnt, capacity: int) -> jax.Array:
+    """Packed form of ``arange(capacity) < cnt`` — the validity of a
+    compacted table, computed word-wise (no per-row expansion).
+
+    ``cnt`` may be traced; ``capacity`` is static.  Requires
+    ``cnt <= capacity`` (always true for a row count).
+    """
+    base = jnp.arange(n_words(capacity), dtype=jnp.int32) * WORD_BITS
+    rem = jnp.clip(jnp.asarray(cnt, jnp.int32) - base, 0, WORD_BITS)
+    full = jnp.uint32(0xFFFFFFFF)
+    # shift amount stays < 32 (shift-by-width is undefined); rem == 32 takes
+    # the ``full`` branch of the where
+    part = (jnp.uint32(1) << jnp.minimum(rem, WORD_BITS - 1).astype(jnp.uint32)
+            ) - jnp.uint32(1)
+    return jnp.where(rem >= WORD_BITS, full, part)
+
+
+def bit_at(words: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gathered bit test: ``mask[idx]`` without materializing the bool mask.
+
+    Reads the packed words (1 bit/row of HBM traffic) and extracts each
+    queried bit in registers — the fused select the executor uses on the
+    predicate->cohort path instead of a bool-column round trip.
+    """
+    i = idx.astype(jnp.int32)
+    w = words[i >> 5]
+    return ((w >> (i & 31).astype(jnp.uint32)) & 1).astype(bool)

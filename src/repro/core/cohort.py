@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitset as _bs
 from repro.core.columnar import ColumnarTable
 from repro.core.metadata import OperationLog
 
@@ -26,40 +27,42 @@ __all__ = ["Bitset", "Cohort", "CohortCollection", "CohortFlow"]
 
 
 # ---------------------------------------------------------------------------
-# Packed-bitset subject sets
+# Packed-bitset subject sets — thin facade over the shared ``core.bitset``
+# layout (ONE packing for subject sets, table validity and kernel outputs)
 # ---------------------------------------------------------------------------
 class Bitset:
-    """Fixed-universe packed bitset (uint32 words)."""
+    """Fixed-universe packed bitset (uint32 words, ``core.bitset`` layout)."""
 
     @staticmethod
     def n_words(n_patients: int) -> int:
-        return (n_patients + 31) // 32
+        return _bs.n_words(n_patients)
 
     @staticmethod
     def from_mask(mask: jax.Array) -> jax.Array:
-        n = mask.shape[0]
-        pad = (-n) % 32
-        m = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(-1, 32)
-        weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-        return (m * weights).sum(axis=1, dtype=jnp.uint32)
+        return _bs.pack(mask)
 
     @staticmethod
     def from_indices(idx: jax.Array, valid: jax.Array, n_patients: int) -> jax.Array:
+        """Subject bitset from event-row patient indices.  ``valid`` is the
+        event rows' validity: a bool row mask or (bitset-native tables) the
+        packed word form — the packed path selects bits by word gather
+        (``bitset.bit_at``), never expanding a bool validity column."""
+        if _bs.is_packed(valid):
+            valid = _bs.bit_at(valid, jnp.arange(idx.shape[0]))
         mask = (
             jnp.zeros((n_patients,), bool)
             .at[jnp.where(valid, idx, n_patients)]
             .set(True, mode="drop")
         )
-        return Bitset.from_mask(mask)
+        return _bs.pack(mask)
 
     @staticmethod
     def to_mask(bits: jax.Array, n_patients: int) -> jax.Array:
-        words = bits[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]
-        return (words & 1).astype(bool).reshape(-1)[:n_patients]
+        return _bs.unpack(bits, n_patients)
 
     @staticmethod
     def count(bits: jax.Array) -> jax.Array:
-        return jax.lax.population_count(bits).sum(dtype=jnp.int32)
+        return _bs.count(bits)
 
 
 # ---------------------------------------------------------------------------
@@ -97,7 +100,16 @@ class Cohort:
         return int(Bitset.count(self.subjects))
 
     def subjects_mask(self) -> jax.Array:
-        return Bitset.to_mask(self.subjects, self.n_patients)
+        """Per-patient bool membership mask.  The unpack of the packed
+        subject bitset is memoized per subjects array — the ">25 statistics"
+        battery hits this once per ``stats.compute`` instead of once per
+        statistic."""
+        cached = self.__dict__.get("_subjects_mask_cache")
+        if cached is not None and cached[0] is self.subjects:
+            return cached[1]
+        mask = Bitset.to_mask(self.subjects, self.n_patients)
+        self.__dict__["_subjects_mask_cache"] = (self.subjects, mask)
+        return mask
 
     def describe(self) -> str:
         return self.description

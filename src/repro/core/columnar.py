@@ -7,23 +7,37 @@ exploits three columnar properties (paper §3.4):
   (3) row-value filtering happens late, on already-reduced data.
 
 On TPU the equivalent resident format is a struct-of-arrays of fixed-capacity
-``jnp`` arrays plus a validity mask.  XLA requires static shapes, so a table has
-a *capacity* (allocated rows) and a *count* (valid rows); "null skipping"
-becomes mask algebra (masked lanes are never re-materialized), and compaction is
-an explicit, vectorized gather (see ``kernels/filter_compact``).
+``jnp`` arrays plus a validity mask.  XLA requires static shapes, so a table
+has a *capacity* (allocated rows) and a *count* (valid rows); "null skipping"
+becomes mask algebra (masked lanes are never re-materialized), and compaction
+is an explicit, vectorized gather (see ``kernels/filter_compact``).
+
+Validity representation: ``valid`` is a **packed uint32 bitset** (row ``i`` at
+word ``i // 32``, bit ``i % 32`` — the one layout shared with
+``cohort.Bitset`` and the Pallas kernels; see ``core/bitset``).  A validity
+word costs 1 bit/row instead of the 1 byte/row of a bool column, so mask
+algebra, cohort set-ops and the compaction keep-mask stay memory-bandwidth-
+bound on *metadata*; the Pallas predicate kernel's packed output drops into
+the table without an unpack hop.  Consumers that need a per-row mask (sorts,
+segment folds, host export) call ``valid_bool()`` — the explicit, auditable
+expansion boundary.
 
 The class is a registered pytree so tables flow through ``jit``/``shard_map``
 unchanged and shard across a mesh ``data`` axis like Spark partitions across
-executors.
+executors.  ``capacity`` is static pytree aux-data (shapes are static under
+XLA anyway); the raw constructor accepts a bool row mask for ``valid`` and
+packs it at the boundary, so eager call sites migrate incrementally.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, Mapping, Sequence
+from typing import Callable, Dict, Iterable, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import bitset as _bs
 
 __all__ = [
     "ColumnarTable",
@@ -55,55 +69,92 @@ def _max_key(dtype) -> jax.Array:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class ColumnarTable:
-    """Fixed-capacity struct-of-arrays table with a validity mask.
+    """Fixed-capacity struct-of-arrays table with a packed-bitset validity.
 
     Attributes:
-      columns: name -> (capacity,) array.  All columns share the capacity.
-      valid:   (capacity,) bool — row validity (Spark row existence).
-      count:   scalar int32 — number of valid rows (== valid.sum(); carried so
-               downstream code never re-reduces).
+      columns:  name -> (capacity,) array.  All columns share the capacity.
+      valid:    (ceil(capacity/32),) uint32 — packed row-validity bitset
+                (``core.bitset`` layout; bits >= capacity are always 0).
+                A bool ``(capacity,)`` row mask may be passed instead; the
+                constructor packs it at the boundary.
+      count:    scalar int32 — number of valid rows (== popcount(valid);
+                carried so downstream code never re-reduces).
+      capacity: static row capacity (pytree aux-data); derived from the
+                columns (or a bool mask) when omitted.
     """
 
     columns: Dict[str, jax.Array]
     valid: jax.Array
     count: jax.Array
+    capacity: Optional[int] = None
+
+    def __post_init__(self):
+        v = self.valid
+        if not _bs.is_packed(v):
+            v = jnp.asarray(v, bool)
+            if self.capacity is None:
+                self.capacity = int(v.shape[0])
+            self.valid = _bs.pack(v)
+        elif self.capacity is None:
+            if not self.columns:
+                raise ValueError(
+                    "packed validity needs at least one column (or an "
+                    "explicit capacity) to recover the row capacity")
+            self.capacity = int(next(iter(self.columns.values())).shape[0])
 
     # -- pytree protocol -----------------------------------------------------
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
         children = tuple(self.columns[n] for n in names) + (self.valid, self.count)
-        return children, names
+        return children, (names, self.capacity)
 
     @classmethod
-    def tree_unflatten(cls, names, children):
+    def tree_unflatten(cls, aux, children):
+        names, capacity = aux
         cols = dict(zip(names, children[: len(names)]))
         valid, count = children[len(names)], children[len(names) + 1]
-        return cls(cols, valid, count)
+        return cls(cols, valid, count, capacity)
 
     # -- constructors --------------------------------------------------------
     @classmethod
-    def from_columns(cls, columns: Mapping[str, jax.Array], valid: jax.Array | None = None) -> "ColumnarTable":
+    def from_columns(cls, columns: Mapping[str, jax.Array],
+                     valid: jax.Array | None = None) -> "ColumnarTable":
+        """Build a table; ``valid`` may be a ``(capacity,) bool`` row mask OR
+        an already-packed ``(ceil(capacity/32),) uint32`` bitset (e.g. a
+        predicate-kernel output).  Either form is length-validated against
+        the column capacity — a mismatched mask would silently corrupt
+        ``count`` and every downstream popcount."""
         cols = {k: jnp.asarray(v) for k, v in columns.items()}
         cap = next(iter(cols.values())).shape[0]
         for k, v in cols.items():
             if v.shape[0] != cap:
                 raise ValueError(f"column {k!r} capacity {v.shape[0]} != {cap}")
         if valid is None:
-            valid = jnp.ones((cap,), dtype=bool)
+            words = _bs.first_n(cap, cap)
+            return cls(dict(cols), words, jnp.int32(cap), int(cap))
+        if _bs.is_packed(valid):
+            valid = jnp.asarray(valid)
+            if valid.shape[0] != _bs.n_words(cap):
+                raise ValueError(
+                    f"packed valid has {valid.shape[0]} words but capacity "
+                    f"{cap} needs {_bs.n_words(cap)}")
+            # enforce the tail-bits-clear invariant on caller-supplied words
+            valid = valid & _bs.first_n(cap, cap)
+            return cls(dict(cols), valid, _bs.count(valid), int(cap))
         valid = jnp.asarray(valid, dtype=bool)
-        return cls(dict(cols), valid, valid.sum().astype(jnp.int32))
+        if valid.shape[0] != cap:
+            raise ValueError(
+                f"valid mask length {valid.shape[0]} != capacity {cap}")
+        return cls(dict(cols), _bs.pack(valid),
+                   valid.sum().astype(jnp.int32), int(cap))
 
     @classmethod
     def empty(cls, spec: Mapping[str, np.dtype], capacity: int) -> "ColumnarTable":
         cols = {k: jnp.zeros((capacity,), dtype=dt) for k, dt in spec.items()}
-        valid = jnp.zeros((capacity,), dtype=bool)
-        return cls(cols, valid, jnp.int32(0))
+        valid = jnp.zeros((_bs.n_words(capacity),), jnp.uint32)
+        return cls(cols, valid, jnp.int32(0), int(capacity))
 
     # -- basic properties ----------------------------------------------------
-    @property
-    def capacity(self) -> int:
-        return int(self.valid.shape[0])
-
     @property
     def column_names(self) -> tuple:
         return tuple(sorted(self.columns))
@@ -111,76 +162,106 @@ class ColumnarTable:
     def num_valid(self) -> jax.Array:
         return self.count
 
+    def valid_bool(self) -> jax.Array:
+        """Per-row bool validity — the compatibility expansion for consumers
+        that need a row mask (sorts, segment folds).  The packed ``valid``
+        words are the canonical form; this is a fused bitwise expansion."""
+        return _bs.unpack(self.valid, self.capacity)
+
+    def valid_numpy(self) -> np.ndarray:
+        """Host-side per-row bool validity (numpy)."""
+        return _bs.unpack_np(np.asarray(self.valid), self.capacity)
+
     def __getitem__(self, name: str) -> jax.Array:
         return self.columns[name]
 
     # -- columnar ops (paper Fig. 2 steps) ------------------------------------
     def select(self, names: Sequence[str]) -> "ColumnarTable":
         """Step 1 — column projection.  Pure metadata: no data movement."""
-        return ColumnarTable({n: self.columns[n] for n in names}, self.valid, self.count)
+        return ColumnarTable({n: self.columns[n] for n in names},
+                             self.valid, self.count, self.capacity)
 
     def with_columns(self, extra: Mapping[str, jax.Array]) -> "ColumnarTable":
         cols = dict(self.columns)
         for k, v in extra.items():
             cols[k] = jnp.asarray(v)
-        return ColumnarTable(cols, self.valid, self.count)
+        return ColumnarTable(cols, self.valid, self.count, self.capacity)
 
     def filter(self, mask: jax.Array) -> "ColumnarTable":
-        """Lazy row filter: narrows the validity mask only (zero data movement).
-
-        This is the columnar analogue of Parquet predicate pushdown — invalid
-        lanes stay allocated but are never consumed.
+        """Lazy row filter: narrows the validity bitset only (zero data
+        movement).  ``mask`` is a ``(capacity,) bool`` row mask or an
+        already-packed word array — either way the update is a word-wise AND
+        (the columnar analogue of Parquet predicate pushdown; invalid lanes
+        stay allocated but are never consumed).
         """
-        new_valid = self.valid & mask
-        return ColumnarTable(self.columns, new_valid, new_valid.sum().astype(jnp.int32))
+        if _bs.is_packed(mask):
+            new_valid = self.valid & mask
+        else:
+            new_valid = self.valid & _bs.pack(jnp.asarray(mask, bool))
+        return ColumnarTable(self.columns, new_valid, _bs.count(new_valid),
+                             self.capacity)
 
     def drop_nulls(self, names: Sequence[str]) -> "ColumnarTable":
         """Step 2 — null filtering via mask algebra (cost ~ metadata)."""
-        mask = self.valid
+        mask = None
         for n in names:
-            mask = mask & ~is_null(self.columns[n])
-        return ColumnarTable(self.columns, mask, mask.sum().astype(jnp.int32))
+            ok = ~is_null(self.columns[n])
+            mask = ok if mask is None else mask & ok
+        if mask is None:
+            return self
+        return self.filter(mask)
 
     def compact(self) -> "ColumnarTable":
         """Gather valid rows to the front, preserving order (stream compaction).
 
-        The gather index for output slot j is the position of the (j+1)-th
-        valid row — a vectorized binary search over ``cumsum(valid)``, O(n log
-        n) with a tiny constant (~3x faster than the stable bool argsort it
-        replaces).  Slots past ``count`` hold clamped garbage and are masked
-        invalid.  The Pallas ``filter_compact`` kernel is the fused production
-        path; this is the always-correct jnp fallback used inside larger
-        traced programs.
+        Bitset-native: the inclusive rank of row ``i`` (== the old
+        ``cumsum(valid_bool)``) is rebuilt from the packed words — an
+        exclusive cumsum of per-word popcounts plus an in-word masked
+        popcount — so the keep-mask read is 1 bit/row.  The gather index for
+        output slot j is then ``searchsorted(rank, j+1)``; slots past
+        ``count`` hold clamped garbage and are masked invalid via a word-wise
+        ``first_n``.  The Pallas ``filter_compact`` kernel (bitset keep-mask
+        variant) is the fused production path; this is the always-correct jnp
+        fallback used inside larger traced programs.
         """
-        c = jnp.cumsum(self.valid.astype(jnp.int32))
-        idx = jnp.searchsorted(
-            c, jnp.arange(1, self.capacity + 1, dtype=jnp.int32), side="left")
-        idx = jnp.minimum(idx, max(self.capacity - 1, 0))
+        cap = self.capacity
+        if cap == 0:
+            return self
+        words = self.valid
+        per_word = jax.lax.population_count(words).astype(jnp.int32)
+        excl = jnp.cumsum(per_word) - per_word           # popcount cumsum
+        rows = jnp.arange(cap, dtype=jnp.int32)
+        w, b = rows >> 5, (rows & 31).astype(jnp.uint32)
+        upto = (jnp.uint32(2) << b) - jnp.uint32(1)      # bits <= b (wraps ok)
+        within = jax.lax.population_count(words[w] & upto).astype(jnp.int32)
+        rank = excl[w] + within                          # inclusive valid rank
+        idx = jnp.searchsorted(rank, rows + 1, side="left")
+        idx = jnp.minimum(idx, max(cap - 1, 0))
         cols = {k: v[idx] for k, v in self.columns.items()}
-        valid = jnp.arange(self.capacity) < self.count
-        return ColumnarTable(cols, valid, self.count)
+        return ColumnarTable(cols, _bs.first_n(self.count, cap), self.count,
+                             cap)
 
     def take(self, idx: jax.Array, idx_valid: jax.Array | None = None) -> "ColumnarTable":
         """Row gather.  ``idx_valid`` marks which gathered rows exist."""
         cols = {k: v[idx] for k, v in self.columns.items()}
-        valid = self.valid[idx]
+        valid = _bs.bit_at(self.valid, idx)
         if idx_valid is not None:
             valid = valid & idx_valid
         return ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
 
     def sort_by(self, names: Sequence[str]) -> "ColumnarTable":
         """Stable lexicographic sort; invalid rows sink to the end."""
+        vb = self.valid_bool()
         keys = []
         for n in reversed(list(names)):  # lexsort: LAST key is primary
             col = self.columns[n]
-            keys.append(jnp.where(self.valid, col, _max_key(col.dtype)))
+            keys.append(jnp.where(vb, col, _max_key(col.dtype)))
         # Most-significant key: invalid rows sink last even if a valid row
         # happens to carry the max key value.
-        keys.append((~self.valid).astype(jnp.int32))
+        keys.append((~vb).astype(jnp.int32))
         idx = jnp.lexsort(tuple(keys))
         cols = {k: v[idx] for k, v in self.columns.items()}
-        valid = self.valid[idx]
-        return ColumnarTable(cols, valid, self.count)
+        return ColumnarTable(cols, vb[idx], self.count, self.capacity)
 
     def shrink_to(self, capacity: int) -> "ColumnarTable":
         """Truncate to a smaller static capacity (inverse of ``pad_to``).
@@ -193,16 +274,19 @@ class ColumnarTable:
         if capacity >= self.capacity:
             return self
         cols = {k: v[:capacity] for k, v in self.columns.items()}
-        valid = self.valid[:capacity]
-        return ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+        valid = self.valid[: _bs.n_words(capacity)] & _bs.first_n(capacity,
+                                                                  capacity)
+        return ColumnarTable(cols, valid, _bs.count(valid), int(capacity))
 
     def pad_to(self, capacity: int) -> "ColumnarTable":
         if capacity < self.capacity:
             raise ValueError("pad_to cannot shrink a table")
         extra = capacity - self.capacity
         cols = {k: jnp.pad(v, (0, extra)) for k, v in self.columns.items()}
-        valid = jnp.pad(self.valid, (0, extra))
-        return ColumnarTable(cols, valid, self.count)
+        # word-wise: new rows are invalid; existing tail bits are already 0
+        valid = jnp.pad(self.valid,
+                        (0, _bs.n_words(capacity) - self.valid.shape[0]))
+        return ColumnarTable(cols, valid, self.count, int(capacity))
 
     @staticmethod
     def concat(tables: Sequence["ColumnarTable"]) -> "ColumnarTable":
@@ -211,16 +295,23 @@ class ColumnarTable:
             if t.column_names != names:
                 raise ValueError("concat: mismatched schemas")
         cols = {n: jnp.concatenate([t.columns[n] for t in tables]) for n in names}
-        valid = jnp.concatenate([t.valid for t in tables])
+        if all(t.capacity % _bs.WORD_BITS == 0 for t in tables[:-1]):
+            # word-aligned fast path (planner capacities are 64-aligned):
+            # packed words concatenate directly, no expansion
+            valid = jnp.concatenate([t.valid for t in tables])
+        else:
+            valid = _bs.pack(jnp.concatenate(
+                [t.valid_bool() for t in tables]))
         count = sum((t.count for t in tables), jnp.int32(0))
-        return ColumnarTable(cols, valid, count)
+        capacity = sum(t.capacity for t in tables)
+        return ColumnarTable(cols, valid, count, capacity)
 
     # -- monitoring (paper §3.3: statistics proving no information loss) -----
     def monitoring_stats(self, key: str) -> Dict[str, jax.Array]:
         """Row-count + order-independent key checksum, computed per stage."""
         # uint32 modular arithmetic: stable under JAX's default x64-disabled mode.
         k = self.columns[key].astype(jnp.uint32)
-        masked = jnp.where(self.valid, k, jnp.uint32(0))
+        masked = jnp.where(self.valid_bool(), k, jnp.uint32(0))
         return {
             "rows": self.count.astype(jnp.int32),
             "key_sum": masked.sum(dtype=jnp.uint32),
@@ -230,7 +321,7 @@ class ColumnarTable:
     # -- host-side conveniences ----------------------------------------------
     def to_numpy(self) -> Dict[str, np.ndarray]:
         n = int(self.count)
-        idx = np.argsort(~np.asarray(self.valid), kind="stable")[:n]
+        idx = np.argsort(~self.valid_numpy(), kind="stable")[:n]
         return {k: np.asarray(v)[idx] for k, v in self.columns.items()}
 
     def head(self, n: int = 8) -> str:

@@ -48,12 +48,13 @@ def dedupe_by(table: ColumnarTable, keys: Sequence[str]) -> ColumnarTable:
     (e.g. one hospital stay appears once per diagnosis×act pair).
     """
     t = table.sort_by(list(keys))
+    tv = t.valid_bool()
     neq = jnp.zeros((t.capacity,), bool)
     for k in keys:
         col = t.columns[k]
         neq = neq | jnp.concatenate([jnp.ones((1,), bool), col[1:] != col[:-1]])
-    prev_valid = jnp.concatenate([jnp.zeros((1,), bool), t.valid[:-1]])
-    keep = t.valid & (neq | ~prev_valid)
+    prev_valid = jnp.concatenate([jnp.zeros((1,), bool), tv[:-1]])
+    keep = tv & (neq | ~prev_valid)
     return t.filter(keep)
 
 

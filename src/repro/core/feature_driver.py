@@ -73,10 +73,11 @@ class FeatureDriver:
         in_window = (start >= t0) & (start < t1)
         dates_ok = is_null(end) | (end >= start)
         keep = in_window & dates_ok
+        evv = ev.valid_bool()
         self.checks = {
             "events_total": int(ev.count),
-            "events_out_of_window": int((ev.valid & ~in_window).sum()),
-            "events_bad_dates": int((ev.valid & ~dates_ok).sum()),
+            "events_out_of_window": int((evv & ~in_window).sum()),
+            "events_bad_dates": int((evv & ~dates_ok).sum()),
         }
         return ev.filter(keep)
 
@@ -93,7 +94,7 @@ class FeatureDriver:
             if feature_of_value is not None else jnp.clip(v, 0, n_features - 1)
         pid = jnp.clip(ev.columns["patient_id"], 0, P - 1)
         flat_idx = (pid * n_buckets + b) * n_features + f
-        flat_idx = jnp.where(ev.valid, flat_idx, P * n_buckets * n_features)
+        flat_idx = jnp.where(ev.valid_bool(), flat_idx, P * n_buckets * n_features)
         out = jnp.zeros((P * n_buckets * n_features,), jnp.float32)
         out = out.at[flat_idx].add(ev.columns["weight"], mode="drop")
         return out.reshape(P, n_buckets, n_features)
@@ -121,7 +122,8 @@ class FeatureDriver:
         known = tok != PAD
 
         pid = ev.columns["patient_id"]
-        ok = ev.valid & known
+        evv = ev.valid_bool()
+        ok = evv & known
         # position within patient = rank among valid rows of the same patient
         seg = jnp.where(ok, pid, P)
         one = ok.astype(jnp.int32)
@@ -138,7 +140,7 @@ class FeatureDriver:
         eos_pos = jnp.clip(n_per + 1, 1, seq_len - 1)
         toks = toks.at[jnp.arange(P), eos_pos].set(EOS)
         mask = jnp.arange(seq_len)[None, :] <= eos_pos[:, None]
-        self.checks["events_truncated"] = int((ev.valid & known & (pos >= seq_len - 2)).sum())
+        self.checks["events_truncated"] = int((evv & known & (pos >= seq_len - 2)).sum())
         return toks, mask
 
     # -- host export --------------------------------------------------------------

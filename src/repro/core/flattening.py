@@ -108,24 +108,26 @@ def lookup_join(
     rows) and null-key left rows miss by construction; both are counted in
     ``FlatteningStats.null_keys``.
     """
-    r_key_null = is_null(right.columns[right_key]) & right.valid
+    l_valid = left.valid_bool()
+    r_key_null = is_null(right.columns[right_key]) & right.valid_bool()
     right = right.filter(~is_null(right.columns[right_key]))
     r = right.sort_by([right_key])
     cap_r = r.capacity
     lk = left.columns[left_key]
-    l_key_null = is_null(lk) & left.valid
+    l_key_null = is_null(lk) & l_valid
     if cap_r == 0:  # empty right table: every left row misses
         pos = jnp.zeros(left.capacity, jnp.int32)
         posc = pos
         found = jnp.zeros(left.capacity, bool)
         r = r.pad_to(1)  # 1-row dummy so gathers below are well-formed
     else:
-        rk = jnp.where(r.valid, r.columns[right_key],
+        r_valid = r.valid_bool()
+        rk = jnp.where(r_valid, r.columns[right_key],
                        _maxval(r.columns[right_key].dtype))
         pos = jnp.searchsorted(rk, lk, side="left")
         posc = jnp.clip(pos, 0, cap_r - 1)
-        found = ((pos < cap_r) & (rk[posc] == lk) & r.valid[posc]
-                 & left.valid & ~is_null(lk))
+        found = ((pos < cap_r) & (rk[posc] == lk) & r_valid[posc]
+                 & l_valid & ~is_null(lk))
 
     new_cols = dict(left.columns)
     for name in r.column_names:
@@ -137,16 +139,17 @@ def lookup_join(
         col = r.columns[name]
         new_cols[out_name] = jnp.where(found, col[posc], _sentinel(col.dtype))
 
-    out = ColumnarTable(new_cols, left.valid, left.count)
+    out = ColumnarTable(new_cols, left.valid, left.count, left.capacity)
     key_col = left.columns[left_key].astype(jnp.uint32)
+    key_sum = jnp.where(l_valid, key_col, 0).sum(dtype=jnp.uint32)
     stats = FlatteningStats(
         stage=f"lookup_join[{left_key}]",
         rows_in=left.count,
         rows_out=out.count,
         matched=found.sum().astype(jnp.int32),
         overflow=jnp.int32(0),
-        key_sum_in=jnp.where(left.valid, key_col, 0).sum(dtype=jnp.uint32),
-        key_sum_out=jnp.where(out.valid, key_col, 0).sum(dtype=jnp.uint32),
+        key_sum_in=key_sum,
+        key_sum_out=key_sum,  # validity unchanged: identical by construction
         null_keys=(l_key_null.sum() + r_key_null.sum()).astype(jnp.int32),
     )
     return out, stats
@@ -174,22 +177,23 @@ def expand_join(
     flags capacity overruns (the audit the paper computes per stage).
     """
     L = left.capacity
-    r_key_null = is_null(right.columns[right_key]) & right.valid
+    l_valid = left.valid_bool()
+    r_key_null = is_null(right.columns[right_key]) & right.valid_bool()
     right = right.filter(~is_null(right.columns[right_key]))
     if right.capacity == 0:
         right = right.pad_to(1)
     r = right.sort_by([right_key])
     cap_r = r.capacity
-    rk = jnp.where(r.valid, r.columns[right_key], _maxval(r.columns[right_key].dtype))
+    rk = jnp.where(r.valid_bool(), r.columns[right_key], _maxval(r.columns[right_key].dtype))
     lk = left.columns[left_key]
-    l_key_null = is_null(lk) & left.valid
+    l_key_null = is_null(lk) & l_valid
 
     start = jnp.searchsorted(rk, lk, side="left")
     stop = jnp.searchsorted(rk, lk, side="right")
     # NULL keys never match (SQL left-join semantics); null-key left rows
     # still emit one row with null right attributes.
-    cnt = jnp.where(left.valid & ~is_null(lk), stop - start, 0)
-    out_cnt = jnp.where(left.valid, jnp.maximum(cnt, 1), 0)
+    cnt = jnp.where(l_valid & ~is_null(lk), stop - start, 0)
+    out_cnt = jnp.where(l_valid, jnp.maximum(cnt, 1), 0)
     offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(out_cnt).astype(jnp.int32)])
     total = offs[-1]
 
@@ -198,7 +202,7 @@ def expand_join(
     rel = j - offs[src]
     has_match = cnt[src] > 0
     ridx = jnp.clip(start[src] + rel, 0, cap_r - 1)
-    out_valid = (j < total) & left.valid[src]
+    out_valid = (j < total) & l_valid[src]
     right_ok = has_match & out_valid
 
     new_cols = {k: jnp.where(out_valid, v[src], _sentinel(v.dtype)) for k, v in left.columns.items()}
@@ -219,7 +223,7 @@ def expand_join(
         rows_out=out.count,
         matched=(cnt > 0).sum().astype(jnp.int32),
         overflow=jnp.maximum(total - out_capacity, 0).astype(jnp.int32),
-        key_sum_in=jnp.where(left.valid, key_u32, 0).sum(dtype=jnp.uint32),
+        key_sum_in=jnp.where(l_valid, key_u32, 0).sum(dtype=jnp.uint32),
         key_sum_out=jnp.where(out_valid, new_cols[left_key].astype(jnp.uint32), 0).sum(dtype=jnp.uint32),
         null_keys=(l_key_null.sum() + r_key_null.sum()).astype(jnp.int32),
     )
@@ -315,7 +319,7 @@ def hash_partition(
     # Finalizer-style integer hash (splittable, good avalanche) — cheap on VPU.
     h = k * jnp.uint32(0x9E3779B1)
     h = h ^ (h >> 16)
-    dest = jnp.where(table.valid, (h % jnp.uint32(n_shards)).astype(jnp.int32), n_shards)
+    dest = jnp.where(table.valid_bool(), (h % jnp.uint32(n_shards)).astype(jnp.int32), n_shards)
 
     order = jnp.argsort(dest, stable=True)           # group rows by destination
     dsort = dest[order]

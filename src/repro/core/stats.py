@@ -36,10 +36,36 @@ def register(name: str):
     return deco
 
 
+def _valid_mask(t: ColumnarTable) -> jax.Array:
+    """Per-row validity of a table, memoized on the table instance so the
+    20+ registered statistics of one ``compute`` call share ONE expansion of
+    the packed validity bitset instead of re-unpacking it each.  Tracers are
+    never cached (stats are host-side, but a traced caller must not leak)."""
+    m = t.__dict__.get("_stats_valid_cache")
+    if m is None:
+        m = t.valid_bool()
+        if not isinstance(m, jax.core.Tracer):
+            t.__dict__["_stats_valid_cache"] = m
+    return m
+
+
 def _cohort_patient_mask(cohort: Cohort, patients: ColumnarTable) -> jax.Array:
-    mask = cohort.subjects_mask()
+    """Cohort-membership mask over the patients table's rows, memoized per
+    (cohort, patients) pair: the subject-bitset unpack and the membership
+    gather run once per ``stats.compute`` battery, not once per statistic.
+    The patients table is held by WEAK reference — the cache never extends
+    its lifetime beyond the caller's."""
+    import weakref
+
+    cached = cohort.__dict__.get("_patient_mask_cache")
+    if cached is not None and cached[0]() is patients:
+        return cached[1]
+    mask = cohort.subjects_mask()          # itself memoized on the cohort
     idx = jnp.clip(patients.columns["patient_id"], 0, cohort.n_patients - 1)
-    return patients.valid & mask[idx]
+    m = _valid_mask(patients) & mask[idx]
+    if not isinstance(m, jax.core.Tracer):
+        cohort.__dict__["_patient_mask_cache"] = (weakref.ref(patients), m)
+    return m
 
 
 # -- patient-centric ----------------------------------------------------------
@@ -80,14 +106,14 @@ def _cohort_events(cohort: Cohort) -> ColumnarTable:
 def events_per_category(cohort: Cohort, *_, **__) -> Dict:
     ev = _cohort_events(cohort)
     cat = jnp.clip(ev.columns["category"], 0, 15)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), cat, num_segments=16)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), cat, num_segments=16)
     return {Category.NAMES.get(i, str(i)): int(hist[i]) for i in range(16) if int(hist[i])}
 
 
 @register("events_per_patient")
 def events_per_patient(cohort: Cohort, *_, **__) -> Dict:
     ev = _cohort_events(cohort)
-    seg = jnp.where(ev.valid, ev.columns["patient_id"], cohort.n_patients)
+    seg = jnp.where(_valid_mask(ev), ev.columns["patient_id"], cohort.n_patients)
     per = jax.ops.segment_sum(
         jnp.ones_like(seg), jnp.clip(seg, 0, cohort.n_patients), cohort.n_patients + 1
     )[: cohort.n_patients]
@@ -105,7 +131,7 @@ def events_per_patient(cohort: Cohort, *_, **__) -> Dict:
 def events_per_month(cohort: Cohort, *_, t0: int = 14_600, n_months: int = 37, **__) -> Dict:
     ev = _cohort_events(cohort)
     m = jnp.clip((ev.columns["start"] - t0) // 30, 0, n_months - 1)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), m, num_segments=n_months)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), m, num_segments=n_months)
     return {"per_month": np.asarray(hist).tolist()}
 
 
@@ -113,7 +139,7 @@ def events_per_month(cohort: Cohort, *_, t0: int = 14_600, n_months: int = 37, *
 def top_values(cohort: Cohort, *_, k: int = 10, n_codes: int = 4096, **__) -> Dict:
     ev = _cohort_events(cohort)
     v = jnp.clip(ev.columns["value"], 0, n_codes - 1)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), v, num_segments=n_codes)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), v, num_segments=n_codes)
     top = jnp.argsort(-hist)[:k]
     return {int(c): int(hist[c]) for c in np.asarray(top) if int(hist[c]) > 0}
 
@@ -160,7 +186,7 @@ def distribution_by_gender_age_bucket(cohort: Cohort, patients: ColumnarTable,
 # Event-centric statistics") ---------------------------------------------------
 def _per_patient_counts(cohort: Cohort) -> jax.Array:
     ev = _cohort_events(cohort)
-    seg = jnp.where(ev.valid, ev.columns["patient_id"], cohort.n_patients)
+    seg = jnp.where(_valid_mask(ev), ev.columns["patient_id"], cohort.n_patients)
     return jax.ops.segment_sum(
         jnp.ones_like(seg), jnp.clip(seg, 0, cohort.n_patients),
         cohort.n_patients + 1)[: cohort.n_patients]
@@ -208,21 +234,21 @@ def events_per_patient_percentiles(cohort: Cohort, *_, **__):
 def distinct_values(cohort: Cohort, *_, n_codes: int = 65_536, **__):
     ev = _cohort_events(cohort)
     v = jnp.clip(ev.columns["value"], 0, n_codes - 1)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), v, num_segments=n_codes)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), v, num_segments=n_codes)
     return {"distinct": int((hist > 0).sum())}
 
 
 @register("first_event_date")
 def first_event_date(cohort: Cohort, *_, **__):
     ev = _cohort_events(cohort)
-    s = jnp.where(ev.valid, ev.columns["start"], 2_000_000_000)
+    s = jnp.where(_valid_mask(ev), ev.columns["start"], 2_000_000_000)
     return {"min_start": int(s.min())}
 
 
 @register("last_event_date")
 def last_event_date(cohort: Cohort, *_, **__):
     ev = _cohort_events(cohort)
-    s = jnp.where(ev.valid, ev.columns["start"], -2_000_000_000)
+    s = jnp.where(_valid_mask(ev), ev.columns["start"], -2_000_000_000)
     return {"max_start": int(s.max())}
 
 
@@ -231,7 +257,7 @@ def event_duration(cohort: Cohort, *_, **__):
     from repro.core.columnar import is_null as _is_null
 
     ev = _cohort_events(cohort)
-    longi = ev.valid & ~_is_null(ev.columns["end"])
+    longi = _valid_mask(ev) & ~_is_null(ev.columns["end"])
     dur = jnp.where(longi, ev.columns["end"] - ev.columns["start"], 0)
     n = jnp.maximum(longi.sum(), 1)
     return {"longitudinal": int(longi.sum()), "mean_days": float(dur.sum() / n)}
@@ -240,19 +266,19 @@ def event_duration(cohort: Cohort, *_, **__):
 @register("weight_total")
 def weight_total(cohort: Cohort, *_, **__):
     ev = _cohort_events(cohort)
-    return {"weight_sum": float(jnp.where(ev.valid, ev.columns["weight"], 0).sum())}
+    return {"weight_sum": float(jnp.where(_valid_mask(ev), ev.columns["weight"], 0).sum())}
 
 
 @register("events_by_gender")
 def events_by_gender(cohort: Cohort, patients: ColumnarTable, **_):
     ev = _cohort_events(cohort)
     pid = jnp.clip(ev.columns["patient_id"], 0, cohort.n_patients - 1)
-    pidx = jnp.where(patients.valid, patients.columns["patient_id"], cohort.n_patients)
+    pidx = jnp.where(_valid_mask(patients), patients.columns["patient_id"], cohort.n_patients)
     g_dense = jnp.zeros((cohort.n_patients,), jnp.int32).at[pidx].set(
         patients.columns["gender"], mode="drop")
     g = g_dense[pid]
-    male = (ev.valid & (g == 1)).sum()
-    female = (ev.valid & (g == 2)).sum()
+    male = (_valid_mask(ev) & (g == 1)).sum()
+    female = (_valid_mask(ev) & (g == 2)).sum()
     return {"male_events": int(male), "female_events": int(female)}
 
 
@@ -260,7 +286,7 @@ def events_by_gender(cohort: Cohort, patients: ColumnarTable, **_):
 def events_per_year(cohort: Cohort, *_, t0: int = 14_600, **__):
     ev = _cohort_events(cohort)
     y = jnp.clip((ev.columns["start"] - t0) // 365, 0, 3)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), y, num_segments=4)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), y, num_segments=4)
     return {f"year_{i}": int(hist[i]) for i in range(4)}
 
 
@@ -268,7 +294,7 @@ def events_per_year(cohort: Cohort, *_, t0: int = 14_600, **__):
 def group_distribution(cohort: Cohort, *_, n_groups: int = 16, **__):
     ev = _cohort_events(cohort)
     g = jnp.clip(ev.columns["group_id"], 0, n_groups - 1)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), g, num_segments=n_groups)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), g, num_segments=n_groups)
     return {int(i): int(hist[i]) for i in range(n_groups) if int(hist[i])}
 
 
@@ -291,7 +317,7 @@ def mean_gap_days(cohort: Cohort, *_, **__):
     pid = ev.columns["patient_id"]
     start = ev.columns["start"]
     same = jnp.concatenate([jnp.zeros((1,), bool),
-                            (pid[1:] == pid[:-1]) & ev.valid[:-1]]) & ev.valid
+                            (pid[1:] == pid[:-1]) & _valid_mask(ev)[:-1]]) & _valid_mask(ev)
     pairs = int(same.sum())
     if pairs == 0:
         return {"mean_gap": 0.0, "pairs": 0}
@@ -325,15 +351,15 @@ def gender_ratio(cohort: Cohort, patients: ColumnarTable, **_):
 def value_range(cohort: Cohort, *_, **__):
     ev = _cohort_events(cohort)
     v = ev.columns["value"]
-    return {"min": int(jnp.where(ev.valid, v, 2**30).min()),
-            "max": int(jnp.where(ev.valid, v, -2**30).max())}
+    return {"min": int(jnp.where(_valid_mask(ev), v, 2**30).min()),
+            "max": int(jnp.where(_valid_mask(ev), v, -2**30).max())}
 
 
 @register("events_per_category_per_patient")
 def events_per_category_per_patient(cohort: Cohort, *_, **__):
     ev = _cohort_events(cohort)
     cat = jnp.clip(ev.columns["category"], 0, 15)
-    hist = jax.ops.segment_sum(ev.valid.astype(jnp.int32), cat, num_segments=16)
+    hist = jax.ops.segment_sum(_valid_mask(ev).astype(jnp.int32), cat, num_segments=16)
     n = max(cohort.subject_count(), 1)
     return {Category.NAMES.get(i, str(i)): round(float(hist[i]) / n, 3)
             for i in range(16) if int(hist[i])}
@@ -345,12 +371,12 @@ def age_at_first_event(cohort: Cohort, patients: ColumnarTable, **_):
 
     ev = _cohort_events(cohort)
     obs = _obs(ev, cohort.n_patients)
-    pidx = jnp.where(patients.valid, patients.columns["patient_id"], cohort.n_patients)
+    pidx = jnp.where(_valid_mask(patients), patients.columns["patient_id"], cohort.n_patients)
     birth = jnp.zeros((cohort.n_patients,), jnp.int32).at[pidx].set(
         patients.columns["birth_date"], mode="drop")
     age = (obs.columns["start"] - birth) / 365.0
-    n = jnp.maximum(obs.valid.sum(), 1)
-    return {"mean": float(jnp.where(obs.valid, age, 0).sum() / n)}
+    n = jnp.maximum(_valid_mask(obs).sum(), 1)
+    return {"mean": float(jnp.where(_valid_mask(obs), age, 0).sum() / n)}
 
 
 @register("top_patients_by_events")

@@ -47,20 +47,21 @@ def _seg_sum(x, seg, num, valid):
 
 def _clip_seg(events: ColumnarTable, n_patients: int):
     seg = jnp.clip(events.columns["patient_id"], 0, n_patients - 1)
-    return jnp.where(events.valid, seg, n_patients - 1)
+    return jnp.where(events.valid_bool(), seg, n_patients - 1)
 
 
 # ---------------------------------------------------------------------------
 def observation_period(events: ColumnarTable, n_patients: int) -> ColumnarTable:
     """Per-patient [first event, last event] continuous event (Table 4)."""
     seg = _clip_seg(events, n_patients)
-    first = _seg_min(events.columns["start"], seg, n_patients, events.valid)
-    last_s = _seg_max(events.columns["start"], seg, n_patients, events.valid)
+    ev_valid = events.valid_bool()
+    first = _seg_min(events.columns["start"], seg, n_patients, ev_valid)
+    last_s = _seg_max(events.columns["start"], seg, n_patients, ev_valid)
     last_e = _seg_max(
         jnp.where(is_null(events.columns["end"]), events.columns["start"], events.columns["end"]),
-        seg, n_patients, events.valid,
+        seg, n_patients, ev_valid,
     )
-    cnt = _seg_sum(jnp.ones_like(seg), seg, n_patients, events.valid)
+    cnt = _seg_sum(jnp.ones_like(seg), seg, n_patients, ev_valid)
     pid = jnp.arange(n_patients, dtype=jnp.int32)
     return make_events(
         patient_id=pid, category=Category.OBSERVATION, value=jnp.zeros_like(pid),
@@ -85,14 +86,14 @@ def follow_up(
     start = obs.columns["start"] + jnp.int32(delay_days)
     # death date scattered into a dense patient-indexed array (robust to gaps
     # in the id space and to table padding)
-    pidx = jnp.where(patients.valid, patients.columns["patient_id"], n_patients)
+    pidx = jnp.where(patients.valid_bool(), patients.columns["patient_id"], n_patients)
     death = (
         jnp.full((n_patients,), NULL_INT, jnp.int32)
         .at[pidx]
         .set(patients.columns["death_date"], mode="drop")
     )
     end = jnp.where(is_null(death), jnp.int32(study_end), jnp.minimum(death, study_end))
-    valid = obs.valid & (start < end)
+    valid = obs.valid_bool() & (start < end)
     pid = jnp.arange(n_patients, dtype=jnp.int32)
     return make_events(
         patient_id=pid, category=Category.FOLLOW_UP, value=jnp.zeros_like(pid),
@@ -106,9 +107,10 @@ def trackloss(dispenses: ColumnarTable, n_patients: int, gap_days: int) -> Colum
     ev = sort_events(dispenses)
     pid = ev.columns["patient_id"]
     start = ev.columns["start"]
-    same = jnp.concatenate([jnp.zeros((1,), bool), (pid[1:] == pid[:-1]) & ev.valid[:-1]])
+    evv = ev.valid_bool()
+    same = jnp.concatenate([jnp.zeros((1,), bool), (pid[1:] == pid[:-1]) & evv[:-1]])
     prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), start[:-1]])
-    gap = jnp.where(same & ev.valid, start - prev, 0)
+    gap = jnp.where(same & evv, start - prev, 0)
     hit = gap > gap_days
     out = make_events(
         patient_id=pid, category=Category.TRACKLOSS, value=jnp.zeros_like(pid),
@@ -116,8 +118,9 @@ def trackloss(dispenses: ColumnarTable, n_patients: int, gap_days: int) -> Colum
     )
     # one trackloss per patient: keep the earliest
     seg = _clip_seg(out, n_patients)
-    first = _seg_min(out.columns["start"], seg, n_patients, out.valid)
-    keep = out.valid & (out.columns["start"] == first[seg])
+    outv = out.valid_bool()
+    first = _seg_min(out.columns["start"], seg, n_patients, outv)
+    keep = outv & (out.columns["start"] == first[seg])
     dup = jnp.concatenate([jnp.zeros((1,), bool), (seg[1:] == seg[:-1]) & keep[:-1]])
     return out.filter(keep & ~dup)
 
@@ -143,21 +146,22 @@ def exposures(
     cap = ev.capacity
     pid, val, start = ev.columns["patient_id"], ev.columns["value"], ev.columns["start"]
 
+    evv = ev.valid_bool()
     same_group = jnp.concatenate(
-        [jnp.zeros((1,), bool), (pid[1:] == pid[:-1]) & (val[1:] == val[:-1]) & ev.valid[:-1]]
+        [jnp.zeros((1,), bool), (pid[1:] == pid[:-1]) & (val[1:] == val[:-1]) & evv[:-1]]
     )
     prev_start = jnp.concatenate([jnp.zeros((1,), jnp.int32), start[:-1]])
     chained = same_group & (start - prev_start <= purview_days)
-    new_exposure = ev.valid & ~chained
+    new_exposure = evv & ~chained
     # exposure id per row (0-based); invalid rows ride along harmlessly
     eid = jnp.cumsum(new_exposure.astype(jnp.int32)) - 1
     eid = jnp.clip(eid, 0, cap - 1)
 
-    first = _seg_min(start, eid, cap, ev.valid)
-    last = _seg_max(start, eid, cap, ev.valid)
-    n_disp = _seg_sum(jnp.ones_like(eid), eid, cap, ev.valid)
-    e_pid = _seg_max(pid, eid, cap, ev.valid)
-    e_val = _seg_max(val, eid, cap, ev.valid)
+    first = _seg_min(start, eid, cap, evv)
+    last = _seg_max(start, eid, cap, evv)
+    n_disp = _seg_sum(jnp.ones_like(eid), eid, cap, evv)
+    e_pid = _seg_max(pid, eid, cap, evv)
+    e_val = _seg_max(val, eid, cap, evv)
 
     end = last + jnp.int32(purview_days)
     if not limited:
@@ -193,11 +197,14 @@ def exposures_sharded(
     from repro.distributed.pipeline import compat_shard_map
 
     n = mesh.shape[axis_name]
-    cap = -(-dispenses.capacity // n) * n
+    # word-aligned shard blocks: the packed validity words split across the
+    # mesh axis only when every shard's row block is a multiple of 32
+    quantum = 32 * n
+    cap = -(-dispenses.capacity // quantum) * quantum
     t = dispenses.pad_to(cap) if cap != dispenses.capacity else dispenses
 
     def body(cols, valid):
-        local = ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+        local = ColumnarTable.from_columns(cols, valid=valid)
         out = exposures(local, n_patients, **kw)
         return dict(out.columns), out.valid
 
@@ -206,7 +213,7 @@ def exposures_sharded(
         out_specs=(P(axis_name), P(axis_name)),
     )
     cols, valid = fn(dict(t.columns), t.valid)
-    return ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+    return ColumnarTable.from_columns(cols, valid=valid)
 
 
 def fractures(
@@ -253,7 +260,7 @@ def fractures(
         ), keep
 
     init = (jnp.int32(-1), jnp.int32(-1), jnp.int32(-2_000_000_000))
-    _, keep = jax.lax.scan(body, init, (pid, sit, dat, cand.valid))
+    _, keep = jax.lax.scan(body, init, (pid, sit, dat, cand.valid_bool()))
 
     kept = cand.filter(keep)
     return make_events(
@@ -277,7 +284,7 @@ def drug_prescriptions(dispenses: ColumnarTable, n_patients: int,
     return ColumnarTable(
         {**ex.columns, "end": end,
          "category": jnp.full_like(ex.columns["category"], Category.DRUG_DISPENSE)},
-        ex.valid, ex.count,
+        ex.valid, ex.count, ex.capacity,
     )
 
 
@@ -291,11 +298,12 @@ def drug_interactions(dispenses: ColumnarTable, n_patients: int,
     pid = ev.columns["patient_id"]
     val = ev.columns["value"]
     start = ev.columns["start"]
-    prev_ok = jnp.concatenate([jnp.zeros((1,), bool), ev.valid[:-1]])
+    evv = ev.valid_bool()
+    prev_ok = jnp.concatenate([jnp.zeros((1,), bool), evv[:-1]])
     same_p = jnp.concatenate([jnp.zeros((1,), bool), pid[1:] == pid[:-1]]) & prev_ok
     prev_val = jnp.concatenate([jnp.zeros((1,), jnp.int32), val[:-1]])
     prev_start = jnp.concatenate([jnp.zeros((1,), jnp.int32), start[:-1]])
-    hit = ev.valid & same_p & (val != prev_val) & (start - prev_start <= window_days)
+    hit = evv & same_p & (val != prev_val) & (start - prev_start <= window_days)
     pair = jnp.minimum(val, prev_val) * jnp.int32(100_003) + jnp.maximum(val, prev_val)
     out = make_events(
         patient_id=pid, category=Category.EXPOSURE, value=pair,

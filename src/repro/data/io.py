@@ -19,7 +19,11 @@ __all__ = ["save_columnar", "load_columnar", "csv_size_bytes", "columnar_size_by
 
 
 def save_columnar(table: ColumnarTable, path: str) -> int:
-    """Write compressed columnar file; returns bytes on disk."""
+    """Write compressed columnar file; returns bytes on disk.
+
+    ``__valid__`` is stored in the canonical packed uint32 bitset form
+    (1 bit/row); ``load_columnar`` also accepts legacy files that stored a
+    bool row mask."""
     arrs = {f"col::{k}": np.asarray(v) for k, v in table.columns.items()}
     arrs["__valid__"] = np.asarray(table.valid)
     np.savez_compressed(path, **arrs)

@@ -138,17 +138,28 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
     like the local executor's so ``Study.run`` shares its realization path —
     ``stats`` holds per-join FlatteningStats as host ints (psum over shards:
     local row counts / overflows / key checksums sum to the global ones).
+
+    Validity is **bitset-sharded**: tables carry packed uint32 validity
+    words, so source capacities are padded to a multiple of ``32 * n`` — the
+    word array then splits across the mesh axis exactly on shard row
+    boundaries, each shard's slice being the packed bitset of its local
+    rows — and shard-local table outputs are padded back to a 32-aligned
+    capacity before leaving the shard_map so the concatenated global words
+    stay row-exact.  Cross-shard subject bitsets and per-node popcounts
+    remain scalar/word ``psum``s (disjoint patients: psum == bitwise OR).
     """
     import numpy as np
+    from repro.core.bitset import count as _bits_count
     from repro.core.columnar import ColumnarTable
     from repro.study.executor import run_plan_body
     from repro.study.plan import COHORT_OPS, TABLE_OPS
 
     n = mesh.shape[axis_name]
+    quantum = 32 * n                 # word-aligned shard blocks (see above)
     env = {}
     for src in plan.sources():
         t = tables[src]
-        cap = -(-t.capacity // n) * n
+        cap = -(-t.capacity // quantum) * quantum
         env[src] = t.pad_to(cap) if cap != t.capacity else t
     cols_in = {s: dict(t.columns) for s, t in env.items()}
     valid_in = {s: t.valid for s, t in env.items()}
@@ -179,13 +190,22 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
     if fn is None:
         def body(cols, valids):
             local = {s: ColumnarTable(c, valids[s],
-                                      valids[s].sum().astype(jnp.int32))
+                                      _bits_count(valids[s]))
                      for s, c in cols.items()}
             vals, counts, stats = run_plan_body(
                 plan, local, n_patients, engine, axis_name=axis_name,
                 n_shards=n, predicate_engine=peng)
-            t_out = {i: (dict(vals[i].columns), vals[i].valid)
-                     for i in ev_ids}
+
+            def _aligned(t):
+                # 32-align the local capacity so the shard-concatenated
+                # validity words stay row-exact on the host side
+                cap = -(-t.capacity // 32) * 32
+                return t if cap == t.capacity else t.pad_to(cap)
+
+            t_out = {}
+            for i in ev_ids:
+                t = _aligned(vals[i])
+                t_out[i] = (dict(t.columns), t.valid)
             b_out = {i: jax.lax.psum(vals[i], axis_name) for i in cohort_ids}
             # local counts sum to global counts; stacked -> one psum+transfer
             ids = tuple(sorted(counts))

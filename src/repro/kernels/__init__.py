@@ -2,6 +2,18 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 import jax
+import jax.numpy as jnp
+
+
+def unpack_words_block(words):
+    """In-VMEM expansion of a packed uint32 validity block to a bool row
+    vector (``core.bitset`` layout: bit i%32 of word i//32).  Shared by every
+    kernel that streams validity packed — ONE definition so the kernels can
+    never disagree with the host-side layout.  Deliberately distinct from
+    ``core.bitset.unpack`` (the HBM-level expansion the no-unpack tests
+    instrument): this runs on an already-loaded VMEM block."""
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, (words.shape[0], 32), 1)
+    return ((words[:, None] >> lanes) & 1).astype(bool).reshape(-1)
 
 
 def default_interpret() -> bool:

@@ -31,9 +31,8 @@ DEFAULT_BLOCK = 256
 _INT_MIN = -2_147_483_648
 
 
-def _kernel(vals_ref, mask_ref, out_ref, cnt_ref):
-    v = vals_ref[...]          # (B,) values
-    m = mask_ref[...] != 0     # (B,) keep mask (int8 on the wire)
+def _compact_body(v, m, out_ref, cnt_ref):
+    """Shared block-compaction body: values ``v`` + bool keep mask ``m``."""
     B = v.shape[0]
 
     keep = m.astype(jnp.int32)
@@ -54,6 +53,61 @@ def _kernel(vals_ref, mask_ref, out_ref, cnt_ref):
     lane = jax.lax.broadcasted_iota(jnp.int32, (B,), 0)
     out_ref[...] = jnp.where(lane < cnt, picked, empty)
     cnt_ref[0] = cnt
+
+
+def _kernel(vals_ref, mask_ref, out_ref, cnt_ref):
+    _compact_body(vals_ref[...], mask_ref[...] != 0, out_ref, cnt_ref)
+
+
+def _kernel_bits(vals_ref, words_ref, out_ref, cnt_ref):
+    """Bitset keep-mask variant: the mask arrives PACKED (``core.bitset``
+    layout, (B//32,) uint32 per block — 1 bit/row of HBM traffic instead of
+    the int8 mask's byte/row) and is expanded in VMEM only."""
+    from repro.kernels import unpack_words_block
+
+    _compact_body(vals_ref[...], unpack_words_block(words_ref[...]),
+                  out_ref, cnt_ref)
+
+
+def filter_compact_bits_blocks(vals: jax.Array, words: jax.Array,
+                               block: int = DEFAULT_BLOCK,
+                               interpret: bool | None = None):
+    """Block-compact ``vals`` by a packed keep-mask bitset.
+
+    Same contract as ``filter_compact_blocks`` but the keep mask is the
+    canonical packed uint32 word array (``ColumnarTable.valid`` /
+    ``kernels.predicate`` output) — ``words[i // 32] >> (i % 32) & 1`` keeps
+    row ``i``.  ``vals`` must be block-quantized with ``words`` holding
+    exactly ``len(vals) / 32`` words (the ``ops.filter_compact`` wrapper
+    pads; bits past the original length must be 0 — the bitset tail
+    invariant).  ``block`` must be a multiple of 32.
+    """
+    from repro.kernels import default_interpret
+
+    interpret = default_interpret() if interpret is None else interpret
+    assert block % 32 == 0, block
+    n = vals.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), vals.dtype), jnp.zeros((0,), jnp.int32)
+    assert n % block == 0 and words.shape[0] * 32 == n, (n, words.shape)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel_bits,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda g: (g,)),
+            pl.BlockSpec((block // 32,), lambda g: (g,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), vals.dtype),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vals, words.astype(jnp.uint32))
 
 
 def filter_compact_blocks(vals: jax.Array, mask: jax.Array, block: int = DEFAULT_BLOCK,

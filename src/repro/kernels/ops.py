@@ -45,16 +45,26 @@ def filter_compact(vals: jax.Array, mask: jax.Array, block: int = 256,
                    interpret: bool | None = None):
     """Compact ``vals[mask]`` to the front; returns (vals_out, count).
 
-    Kernel does block-local compaction; the cross-block stitch is a single
-    gather driven by cumsum of per-block counts.
+    ``mask`` is a ``(n,) bool`` row mask or — the bitset-native hot path —
+    the packed ``(ceil(n/32),) uint32`` keep-mask (``ColumnarTable.valid`` /
+    predicate-kernel output; searchsorted over the per-block popcount
+    cumsums drives the stitch either way, but the packed form streams the
+    keep mask at 1 bit/row).  Kernel does block-local compaction; the
+    cross-block stitch is a single gather driven by cumsum of per-block
+    counts.
     """
     interpret = default_interpret() if interpret is None else interpret
     n = vals.shape[0]
     if n == 0:
         return vals, jnp.int32(0)
     vp = _pad_to(vals, block)
-    mp = _pad_to(mask.astype(bool), block, fill=False)
-    blocks, counts = _fc.filter_compact_blocks(vp, mp, block=block, interpret=interpret)
+    if getattr(mask, "dtype", None) == jnp.uint32:
+        wp = _pad_to(mask, block // 32)      # zero words: padded rows dropped
+        blocks, counts = _fc.filter_compact_bits_blocks(
+            vp, wp, block=block, interpret=interpret)
+    else:
+        mp = _pad_to(mask.astype(bool), block, fill=False)
+        blocks, counts = _fc.filter_compact_blocks(vp, mp, block=block, interpret=interpret)
     offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
     total = offs[-1]
     pos = jnp.arange(vp.shape[0], dtype=jnp.int32)

@@ -10,12 +10,14 @@ Pallas kernel:
   * one grid pass over the projected columns — every leaf op (comparisons,
     arithmetic, ``isin`` via sorted-membership rank compares, sentinel null
     tests, ``&``/``|``/``~``) evaluates entirely in VMEM;
-  * the output is a **packed uint32 bitset** (1 bit/row, 8x smaller than the
+  * the output is a **packed uint32 bitset** (1 bit/row, 8x smaller than a
     bool column) plus per-block popcounts: the mask pass itself never writes
-    a bool column, and the words use the ``cohort.Bitset`` layout so they
-    feed the bitset algebra (``bitset_ops``) directly.  (The executor still
-    unpacks to the table's bool validity for downstream nodes — fused
-    bitwise ops; bitset-native validity end-to-end is a ROADMAP item.)
+    a bool column, and the words use the shared ``core.bitset`` layout.
+    Since the bitset-native validity redesign, ``ColumnarTable.valid`` IS
+    this packed form, so the kernel's output becomes the downstream table's
+    validity verbatim — no unpack hop — and both the input validity and the
+    result cross HBM at 1 bit/row into the cohort algebra
+    (``bitset_ops``) and the compaction keep-mask (``filter_compact``).
 
 Codegen is trace-time: ``compile_predicate`` walks the hashable param tree
 (``expr.Expr.to_param`` form — the exact object plan nodes carry) and emits a
@@ -229,9 +231,12 @@ def _make_kernel(eval_fn: Callable, names: Sequence[str], n_tables: int):
         valid_ref = refs[len(names) + n_tables]
         words_ref, pc_ref = refs[-2:]
 
+        from repro.kernels import unpack_words_block
+
         env = {nm: r[...] for nm, r in zip(names, col_refs)}
         tbls = [r[...] for r in tbl_refs]
-        m = eval_fn(env, tbls) & (valid_ref[...] != 0)
+        # validity arrives PACKED (1 bit/row of HBM); expand in VMEM only
+        m = eval_fn(env, tbls) & unpack_words_block(valid_ref[...])
 
         B = m.shape[0]
         lanes = jax.lax.broadcasted_iota(jnp.uint32, (B // 32, 32), 1)
@@ -243,17 +248,20 @@ def _make_kernel(eval_fn: Callable, names: Sequence[str], n_tables: int):
 
 
 def predicate_bitset_blocks(expr_param: Tuple, cols: Dict[str, jax.Array],
-                            valid: jax.Array, block: int = DEFAULT_BLOCK,
+                            valid_words: jax.Array, block: int = DEFAULT_BLOCK,
                             interpret: Optional[bool] = None):
-    """One fused pass: evaluate ``expr_param`` over ``cols`` AND ``valid``.
+    """One fused pass: evaluate ``expr_param`` over ``cols`` AND the packed
+    ``valid_words`` bitset (``core.bitset`` layout — validity is streamed at
+    1 bit/row, not a bool column).
 
     Returns ``(words, popcounts)`` — the packed uint32 bitset (n/32 words)
-    and the per-block popcounts.  Input length must be a multiple of
-    ``block`` (``predicate_bitset`` pads); ``block`` a multiple of 32.
+    and the per-block popcounts.  Column length must be a multiple of
+    ``block`` (``predicate_bitset`` pads); ``block`` a multiple of 32;
+    ``valid_words`` holds exactly n/32 words.
     """
     interpret = default_interpret() if interpret is None else interpret
     assert block % 32 == 0, block
-    n = valid.shape[0]
+    n = valid_words.shape[0] * 32
     assert n % block == 0, (n, block)
     grid = (n // block,)
     names, tables, eval_fn = compile_predicate(expr_param)
@@ -263,10 +271,10 @@ def predicate_bitset_blocks(expr_param: Tuple, cols: Dict[str, jax.Array],
 
     in_specs = [pl.BlockSpec((block,), lambda g: (g,)) for _ in names]
     in_specs += [pl.BlockSpec((int(t.size),), lambda g: (0,)) for t in tables]
-    in_specs += [pl.BlockSpec((block,), lambda g: (g,))]
+    in_specs += [pl.BlockSpec((block // 32,), lambda g: (g,))]
     operands = ([cols[nm] for nm in names]
                 + [jnp.asarray(t) for t in tables]
-                + [valid.astype(jnp.int8)])
+                + [valid_words.astype(jnp.uint32)])
     return pl.pallas_call(
         _make_kernel(eval_fn, names, len(tables)),
         grid=grid,
@@ -291,37 +299,56 @@ def _pad_to(x: jax.Array, mult: int, fill=0):
     return jnp.concatenate([x, jnp.full((p,), fill, x.dtype)])
 
 
-@functools.partial(jax.jit, static_argnames=("expr_param", "block", "interpret"))
-def _predicate_bitset_jit(columns: Dict[str, jax.Array], valid: jax.Array, *,
+@functools.partial(jax.jit,
+                   static_argnames=("expr_param", "block", "interpret", "n"))
+def _predicate_bitset_jit(columns: Dict[str, jax.Array], words: jax.Array, *,
                           expr_param: Tuple, block: int,
-                          interpret: Optional[bool]):
-    n = valid.shape[0]
+                          interpret: Optional[bool], n: int):
     if n == 0:
         return jnp.zeros((0,), jnp.uint32), jnp.int32(0)
     cols = {nm: _pad_to(c, block) for nm, c in columns.items()}
-    vp = _pad_to(valid.astype(jnp.int8), block)
-    words, pc = predicate_bitset_blocks(expr_param, cols, vp, block=block,
-                                        interpret=interpret)
-    return words[: (n + 31) // 32], pc.sum().astype(jnp.int32)
+    wp = _pad_to(words, block // 32)
+    out, pc = predicate_bitset_blocks(expr_param, cols, wp, block=block,
+                                      interpret=interpret)
+    return out[: (n + 31) // 32], pc.sum().astype(jnp.int32)
 
 
 def predicate_bitset(columns: Dict[str, jax.Array], valid: jax.Array, *,
                      expr_param: Tuple, block: int = DEFAULT_BLOCK,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None,
+                     capacity: Optional[int] = None):
     """Fused predicate -> packed bitset over a table's columns.
 
-    Returns ``(words, count)``: ``words`` is the ceil(n/32)-word uint32
-    bitset of ``valid & expr`` (row i lives at word i//32, bit i%32 — the
-    ``cohort.Bitset`` layout, so the result drops straight into the cohort
-    algebra kernel), ``count`` the total surviving rows.  Columns are padded
-    to the block quantum with invalid rows.  Only the columns the expression
-    reads are passed into the jit boundary — handing in a whole wide table
-    costs nothing extra and never retraces on unrelated columns.
+    ``valid`` is the table's validity: the canonical packed uint32 word form
+    (``ColumnarTable.valid``) or a legacy ``(n,) bool`` row mask, which is
+    packed at the boundary.  Returns ``(words, count)``: ``words`` is the
+    ceil(n/32)-word uint32 bitset of ``valid & expr`` (row i lives at word
+    i//32, bit i%32 — the shared ``core.bitset`` layout, so the result drops
+    straight into the table validity and the cohort algebra kernel),
+    ``count`` the total surviving rows.  Columns are padded to the block
+    quantum with invalid rows.  Only the columns the expression reads are
+    passed into the jit boundary — handing in a whole wide table costs
+    nothing extra and never retraces on unrelated columns.  ``capacity``
+    names the row count when ``valid`` is packed; it defaults to the first
+    column's length.
     """
     names, _, _ = compile_predicate(expr_param)
     missing = [nm for nm in names if nm not in columns]
     if missing:
         raise KeyError(f"predicate reads absent column(s) {missing}")
-    return _predicate_bitset_jit({nm: columns[nm] for nm in names}, valid,
+    if getattr(valid, "dtype", None) == jnp.uint32:
+        if capacity is None:
+            if not names:
+                raise ValueError("packed valid needs an explicit capacity "
+                                 "when the predicate reads no columns")
+            capacity = int(columns[names[0]].shape[0])
+        words = valid
+    else:
+        valid = jnp.asarray(valid, bool)
+        capacity = int(valid.shape[0])
+        from repro.core.bitset import pack as _pack
+
+        words = _pack(valid)
+    return _predicate_bitset_jit({nm: columns[nm] for nm in names}, words,
                                  expr_param=expr_param, block=block,
-                                 interpret=interpret)
+                                 interpret=interpret, n=capacity)

@@ -113,7 +113,12 @@ def contribute_flatten_sliced(b: PlanBuilder, schema, time_column: str,
 
 @dataclasses.dataclass
 class StudyResult:
-    """Realized outputs of one ``Study.run``."""
+    """Realized outputs of one ``Study.run``.
+
+    Table outputs carry the bitset-native validity contract: ``.valid`` is
+    the packed uint32 word form (``core.bitset`` layout, ``count`` ==
+    popcount); use ``.valid_bool()`` / ``.to_numpy()`` for per-row views.
+    """
 
     events: Dict[str, ColumnarTable]          # named table outputs
     cohorts: Dict[str, Cohort]                # named cohorts
@@ -395,10 +400,12 @@ class Study:
         realize cohorts/flow/features, and auto-log provenance.
 
         ``predicate_engine`` ("jnp" | "pallas" | "auto"/None) picks how
-        predicate/fused_mask nodes evaluate: jnp mask algebra or the Pallas
-        Expr->bitset kernel.  "auto" follows the backend (and ``engine=
-        "pallas"``); the optimizer stamps the resolved choice on each node
-        so the OperationLog records it.
+        predicate/fused_mask nodes evaluate: jnp mask algebra (packed back
+        into the bitset validity at the boundary) or the Pallas Expr->bitset
+        kernel, whose packed words become the table validity directly.
+        "auto" follows the backend (and ``engine="pallas"``); the optimizer
+        stamps the resolved choice — and the ``bitset_u32`` validity layout
+        — on each node so the OperationLog records it.
         """
         env = dict(self._sources)
         env.update(tables or {})

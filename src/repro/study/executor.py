@@ -24,10 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitset as _bs
 from repro.core import flattening as _fl
 from repro.core import transformers as _tr
 from repro.core.cohort import Bitset
-from repro.core.columnar import ColumnarTable
+from repro.core.columnar import ColumnarTable, is_null
 from repro.core.events import make_events
 from repro.core.metadata import OperationLog
 from repro.kernels import predicate as _pk
@@ -77,11 +78,13 @@ def _compact_table(t: ColumnarTable, engine: str) -> ColumnarTable:
     cols = {}
     count = None
     for name, col in t.columns.items():
+        # packed keep-mask straight into the kernel (1 bit/row of HBM)
         out, cnt = kops.filter_compact(col, t.valid)
         cols[name] = out
         count = cnt if count is None else count
-    valid = jnp.arange(t.capacity) < count
-    return ColumnarTable(cols, valid, count.astype(jnp.int32))
+    count = count.astype(jnp.int32)
+    return ColumnarTable(cols, _bs.first_n(count, t.capacity), count,
+                         t.capacity)
 
 
 def _stats_dict(fs) -> Dict[str, jax.Array]:
@@ -90,7 +93,7 @@ def _stats_dict(fs) -> Dict[str, jax.Array]:
 
 def _key_checksum(t: ColumnarTable, key: str) -> jax.Array:
     k = t.columns[key].astype(jnp.uint32)
-    return jnp.where(t.valid, k, 0).sum(dtype=jnp.uint32)
+    return jnp.where(t.valid_bool(), k, 0).sum(dtype=jnp.uint32)
 
 
 def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
@@ -154,6 +157,35 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
                      "matched": n_sel, "overflow": overflow,
                      "null_keys": jnp.int32(0), "key_sum_in": ksum_in,
                      "key_sum_out": _key_checksum(out, node.get("col"))}
+    if op == "key_count":
+        # an eliminated (column-pruned) lookup_join: the value is the LEFT
+        # table unchanged; the join's no-loss audit survives as a cheap
+        # key-membership count over the (pruned-to-key) right side
+        left, right = ins
+        lk = left.columns[node.get("left_key")]
+        lvb = left.valid_bool()
+        l_null = is_null(lk) & lvb
+        rk_col = right.columns[node.get("right_key")]
+        rvb = right.valid_bool()
+        r_null = is_null(rk_col) & rvb
+        if right.capacity == 0:   # empty right: every key misses (lookup_join
+            found = jnp.zeros((left.capacity,), bool)        # has this guard)
+        else:
+            r_ok = rvb & ~is_null(rk_col)
+            rk = jnp.where(r_ok, rk_col, _fl._maxval(rk_col.dtype))
+            order = jnp.argsort(rk)
+            rs = rk[order]
+            pos = jnp.searchsorted(rs, lk, side="left")
+            posc = jnp.clip(pos, 0, right.capacity - 1)
+            found = ((pos < right.capacity) & (rs[posc] == lk)
+                     & r_ok[order][posc] & lvb & ~is_null(lk))
+        ksum = jnp.where(lvb, lk.astype(jnp.uint32), 0).sum(dtype=jnp.uint32)
+        zero = jnp.int32(0)
+        return left, {"rows_in": left.count, "rows_out": left.count,
+                      "matched": found.sum().astype(jnp.int32),
+                      "overflow": zero,
+                      "null_keys": (l_null.sum() + r_null.sum()).astype(jnp.int32),
+                      "key_sum_in": ksum, "key_sum_out": ksum}
     if op == "select":
         return ins[0].select(list(node.get("cols")))
     if op in PREDICATE_OPS:
@@ -165,19 +197,18 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
         t = ins[0]
         e = _expr.node_predicate(node)
         if e is None:
-            return ColumnarTable(t.columns, t.valid,
-                                 t.valid.sum().astype(jnp.int32))
+            return t
         eng = node.get("engine") or predicate_engine
         param = e.to_param()
         if eng == "pallas" and _pk.compilable(param):
             words, cnt = _pk.predicate_bitset(
                 t.columns, t.valid, expr_param=param,
-                block=node.get("bitset_block") or _pk.DEFAULT_BLOCK)
-            # the unpack below is bitwise ops XLA fuses into consumers; the
-            # packed words (1 bit/row) are what crossed HBM, and they drop
-            # straight into the cohort bitset algebra / compaction stitch
-            mask = Bitset.to_mask(words, t.capacity)
-            return ColumnarTable(t.columns, mask, cnt)
+                block=node.get("bitset_block") or _pk.DEFAULT_BLOCK,
+                capacity=t.capacity)
+            # the kernel's packed words ARE the table's validity — no unpack
+            # hop: they flow into cohort_from_events, the cohort bitset
+            # algebra and the compaction keep-mask as 1 bit/row metadata
+            return ColumnarTable(t.columns, words, cnt, t.capacity)
         mask = e.mask(t)
         return ColumnarTable(t.columns, mask, mask.sum().astype(jnp.int32))
     if op == "dedupe":
@@ -216,6 +247,13 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
     if op == "cohort_op":
         a, b = ins
         kind = node.get("kind")
+        if engine == "pallas":
+            # fused bitwise-op + popcount Pallas kernel (one HBM pass)
+            from repro.kernels import ops as kops
+
+            words, _ = kops.bitset_op(
+                a, b, {"&": "and", "|": "or", "-": "andnot"}[kind])
+            return words
         if kind == "&":
             return a & b
         if kind == "|":

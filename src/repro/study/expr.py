@@ -179,8 +179,12 @@ class Expr:
         raise NotImplementedError
 
     def mask(self, table: ColumnarTable) -> jax.Array:
-        """Row-filter mask: the expression's boolean value AND row validity."""
-        return table.valid & self.evaluate(table)
+        """Row-filter mask: the expression's boolean value AND row validity.
+
+        This is the jnp fallback path — the per-row expansion here is packed
+        back into the table's bitset validity at the constructor boundary;
+        the Pallas engine emits packed words directly and never takes it."""
+        return table.valid_bool() & self.evaluate(table)
 
 
 class Col(Expr):

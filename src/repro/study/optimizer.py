@@ -23,6 +23,10 @@ level instead of inside each extractor:
     host-side (the Spark driver sizing shuffle partitions): exact output
     sizes for ``expand_join``/``slice_time`` nodes, replacing trace-time
     slack heuristics.
+  * ``eliminate_joins`` — a ``lookup_join`` whose right side was pruned to
+    the bare join key adds no columns and drops no left rows; it degrades to
+    an audit-only ``key_count`` node (the no-loss stats survive as a cheap
+    key-membership count).
   * ``prune_exchanges`` — partitioning-awareness (Spark's
     EnsureRequirements): an exchange whose input is already hash-partitioned
     on its key is dropped; off-mesh every exchange drops.
@@ -46,13 +50,14 @@ from repro.study.plan import (JOIN_OPS, MASK_OPS, PREDICATE_OPS, Node, Plan,
                               PlanBuilder)
 
 __all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction",
-           "prune_columns", "plan_capacities", "prune_exchanges", "dce",
-           "assign_engines", "available_columns", "required_columns"]
+           "prune_columns", "eliminate_joins", "plan_capacities",
+           "prune_exchanges", "dce", "assign_engines", "available_columns",
+           "required_columns"]
 
 # selects hanging off any of these get merged into one union projection
 _MERGE_UPSTREAM = frozenset({
     "scan", "scan_star", "lookup_join", "expand_join", "exchange",
-    "slice_time", "compact", "concat",
+    "slice_time", "compact", "concat", "key_count",
 })
 
 
@@ -229,7 +234,7 @@ def defer_compaction(plan: Plan) -> Plan:
 _PART_PRESERVING = frozenset({
     "select", "predicate", "drop_nulls", "value_filter", "fused_mask",
     "dedupe", "conform_events", "compact", "slice_time", "lookup_join",
-    "expand_join",
+    "expand_join", "key_count",
 })
 
 
@@ -298,6 +303,8 @@ def available_columns(plan: Plan) -> Dict[int, Optional[FrozenSet[str]]]:
             avail[i] = _EVENT_COLS
         elif n.op in _COLS_PRESERVING and n.inputs:
             avail[i] = avail.get(n.inputs[0])
+        elif n.op == "key_count":        # value = the left table unchanged
+            avail[i] = avail.get(n.inputs[0])
         elif n.op in JOIN_OPS:
             la, ra = avail.get(n.inputs[0]), avail.get(n.inputs[1])
             avail[i] = (None if la is None or ra is None
@@ -356,6 +363,10 @@ def required_columns(plan: Plan) -> Dict[int, Optional[FrozenSet[str]]]:
         elif n.op == "concat":
             for j in n.inputs:
                 _push(j, r)
+        elif n.op == "key_count":
+            _push(n.inputs[0],
+                  None if r is None else r | {n.get("left_key")})
+            _push(n.inputs[1], {n.get("right_key")})
         elif n.op in JOIN_OPS:
             l_in, r_in = n.inputs
             ra = avail.get(r_in)
@@ -436,6 +447,43 @@ def prune_columns(plan: Plan) -> Plan:
 
 
 # ---------------------------------------------------------------------------
+def eliminate_joins(plan: Plan) -> Plan:
+    """Join elimination on pruned N:1 joins (the ROADMAP item).
+
+    Column pruning can narrow a ``lookup_join``'s right side to the bare
+    join key; such a join contributes no output column and — N:1 left-join
+    semantics — never drops a left row, so the join itself is dead.  The
+    node degrades to an audit-only ``key_count``: the left table passes
+    through unchanged (no sort-gather of right attributes), while the
+    paper's no-loss audit survives as a cheap key-membership count
+    (matched / null_keys FlatteningStats against the pruned-to-key right
+    side).  Runs after ``prune_columns`` so the stamped
+    ``required_columns`` audit fields carry over.
+    """
+    avail = available_columns(plan)
+    req = required_columns(plan)
+    replace: Dict[int, Node] = {}
+    for i, n in enumerate(plan.nodes):
+        if n.op != "lookup_join":
+            continue
+        r, ra = req.get(i, frozenset()), avail.get(n.inputs[1])
+        if r is None or ra is None:
+            continue
+        right_named = _join_right_cols(n, ra)
+        if any(c in right_named for c in r):
+            continue
+        params = {"left_key": n.get("left_key"),
+                  "right_key": n.get("right_key"),
+                  "name": f"[{n.get('left_key')}]"}
+        if n.get("required_columns") is not None:
+            params["required_columns"] = n.get("required_columns")
+        replace[i] = Node("key_count", n.inputs, tuple(sorted(params.items())))
+    if not replace:
+        return plan
+    return _rebuild(plan, replace)
+
+
+# ---------------------------------------------------------------------------
 def _np_null_mask(a: np.ndarray) -> np.ndarray:
     """Host-side mirror of ``columnar.is_null`` (same sentinel source)."""
     if np.issubdtype(a.dtype, np.floating):
@@ -487,14 +535,14 @@ def plan_capacities(plan: Plan, tables: Mapping, round_to: int = 64,
             if t is None:
                 sim[i] = None
                 continue
-            valid = np.asarray(t.valid)
+            valid = t.valid_numpy()
             sim[i] = {c: np.asarray(t.columns[c])[valid]
                       for c in needed if c in t.columns}
         elif n.op == "select":
             up = sim.get(n.inputs[0])
             sim[i] = (None if up is None else
                       {c: v for c, v in up.items() if c in n.get("cols")})
-        elif n.op in ("compact", "exchange", "lookup_join"):
+        elif n.op in ("compact", "exchange", "lookup_join", "key_count"):
             # row-multiset preserved (lookup_join: N:1 keeps left rows; the
             # gained right attributes are not join keys in a star schema)
             sim[i] = sim.get(n.inputs[0])
@@ -553,20 +601,25 @@ def assign_engines(plan: Plan, predicate_engine: str = "auto",
     block = int(block or _pk.DEFAULT_BLOCK)
     replace: Dict[int, Node] = {}
     for i, n in enumerate(plan.nodes):
-        if n.op not in PREDICATE_OPS:
+        if n.op not in PREDICATE_OPS and n.op != "compact":
             continue
-        e = _expr.node_predicate(n)
-        eng = resolved
-        if eng == "pallas" and (e is None or not _pk.compilable(e.to_param())):
-            eng = "jnp"
         p = dict(n.params)
-        p["engine"] = eng
-        if eng == "pallas":
-            p["bitset_block"] = block
-            p["bitset_word"] = "uint32"
-        else:
-            p.pop("bitset_block", None)
-            p.pop("bitset_word", None)
+        # table validity is the packed-word bitset end-to-end; the stamp
+        # pins the layout in plan goldens and the OperationLog audit
+        p["valid_layout"] = "bitset_u32"
+        if n.op in PREDICATE_OPS:
+            e = _expr.node_predicate(n)
+            eng = resolved
+            if eng == "pallas" and (e is None
+                                    or not _pk.compilable(e.to_param())):
+                eng = "jnp"
+            p["engine"] = eng
+            if eng == "pallas":
+                p["bitset_block"] = block
+                p["bitset_word"] = "uint32"
+            else:
+                p.pop("bitset_block", None)
+                p.pop("bitset_word", None)
         node = Node(n.op, n.inputs, tuple(sorted(p.items())))
         if node != n:
             replace[i] = node
@@ -618,6 +671,7 @@ def optimize(plan: Plan, tables: Optional[Mapping] = None,
     plan = prune_exchanges(plan, n_shards=n_shards)
     if prune_cols:
         plan = prune_columns(plan)
+        plan = eliminate_joins(plan)
     plan = assign_engines(plan, predicate_engine=predicate_engine,
                           engine=engine)
     if tables:

@@ -33,6 +33,9 @@ Node vocabulary (executor semantics in ``executor.py``):
   dedupe(keys)                      -> DISTINCT over keys (sort + run heads)
   conform_events(...)               -> Event-schema conformance
   compact()                         -> the one materialization per output
+  key_count(l, r, keys)             -> eliminated pruned lookup_join: passes
+                                       the left table through, keeps the
+                                       join audit as a key-membership count
   cohort_from_events(name)          -> packed subject bitset from an event table
   cohort_op(kind ∈ {&,|,-})         -> bitset algebra over two cohorts
   transform(fn, kwargs)             -> registered List[Event]->List[Event] fn
@@ -51,12 +54,13 @@ __all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS",
 TABLE_OPS = frozenset({
     "scan", "scan_star", "select", "predicate", "drop_nulls", "value_filter",
     "fused_mask", "dedupe", "conform_events", "compact", "transform", "concat",
-    "lookup_join", "expand_join", "exchange", "slice_time",
+    "lookup_join", "expand_join", "exchange", "slice_time", "key_count",
 })
 # flattening joins (left input 0, right input 1)
 JOIN_OPS = frozenset({"lookup_join", "expand_join"})
 # ops that emit FlatteningStats metadata alongside their table value
-STATS_OPS = frozenset({"lookup_join", "expand_join", "exchange", "slice_time"})
+STATS_OPS = frozenset({"lookup_join", "expand_join", "exchange", "slice_time",
+                       "key_count"})
 # ops whose value is a packed subject bitset
 COHORT_OPS = frozenset({"cohort_from_events", "cohort_op"})
 # mask-only ops the optimizer may fuse into one vectorized predicate
@@ -258,6 +262,15 @@ class PlanBuilder:
 
         return self.predicate(t, _col(col).isin(int(c) for c in codes),
                               label="value_filter")
+
+    def key_count(self, left: int, right: int, left_key: str,
+                  right_key: str) -> int:
+        """Audit-only remnant of an eliminated N:1 join: the node's value is
+        the left table unchanged; its FlatteningStats record a cheap
+        key-membership count against the right side (see the optimizer's
+        ``eliminate_joins``)."""
+        return self.add("key_count", (left, right), left_key=left_key,
+                        right_key=right_key, name=f"[{left_key}]")
 
     def dedupe(self, t: int, keys: Sequence[str]) -> int:
         return self.add("dedupe", (t,), keys=tuple(keys))

@@ -35,7 +35,9 @@ def test_compact_preserves_order():
     c = t.compact()
     assert int(c.count) == 2
     assert np.asarray(c.columns["a"])[:2].tolist() == [6, 8]
-    assert np.asarray(c.valid)[:2].all() and not np.asarray(c.valid)[2:].any()
+    vb = c.valid_numpy()
+    assert vb[:2].all() and not vb[2:].any()
+    assert c.valid.dtype == jnp.uint32          # packed-bitset representation
 
 
 def test_drop_nulls():
@@ -49,7 +51,7 @@ def test_sort_by_sinks_invalid():
     t = make_table([3, 1, 2, 9], valid=[True, True, True, False])
     s = t.sort_by(["a"])
     assert np.asarray(s.columns["a"])[:3].tolist() == [1, 2, 3]
-    assert not np.asarray(s.valid)[3]
+    assert not s.valid_numpy()[3]
 
 
 def test_concat_and_pad():

@@ -56,7 +56,7 @@ def _naive_ids(t: ColumnarTable, exprs) -> list:
     cur = t
     for e in exprs:
         cur = cur.filter(e.mask(cur))
-    return np.asarray(cur.columns["id"])[np.asarray(cur.valid)].tolist()
+    return np.asarray(cur.columns["id"])[cur.valid_numpy()].tolist()
 
 
 def _engine_ids(t: ColumnarTable, exprs, engine: str) -> list:

@@ -79,12 +79,13 @@ def test_exchange_partitions_by_key():
         t = ColumnarTable.from_columns({"k": keys})
 
         def body(cols, valid):
-            tt = ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
+            # valid arrives as the packed bitset, word-sharded on "data"
+            tt = ColumnarTable.from_columns(cols, valid=valid)
             out, ovf = exchange(tt, "k", "data", n, 4096)
             me = jax.lax.axis_index("data")
             kk = out.columns["k"].astype(jnp.uint32)
             h = kk * jnp.uint32(0x9E3779B1); h = h ^ (h >> 16)
-            bad = out.valid & ((h % n).astype(jnp.int32) != me)
+            bad = out.valid_bool() & ((h % n).astype(jnp.int32) != me)
             # rank-1 per-shard outputs (scalars cannot carry a 'data' spec)
             return bad.sum()[None], ovf[None], out.count[None]
 

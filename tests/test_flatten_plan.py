@@ -238,7 +238,11 @@ def test_flatten_extract_one_plan(dcir):
     # flattening and extraction share ONE plan: extract chains onto the
     # flatten node instead of scanning a pre-flattened env table
     ops = res.plan.count_ops()
-    assert ops.get("lookup_join", 0) == 3 and "scan" not in ops
+    # the IR_BEN dimension join is column-pruned to its bare key and then
+    # ELIMINATED (optimizer.eliminate_joins): it survives only as an
+    # audit-only key_count node; the two detail joins carry real columns
+    assert ops.get("lookup_join", 0) == 2 and "scan" not in ops
+    assert ops.get("key_count", 0) == 1
     # one merged union projection downstream of the joins, plus the pruning
     # selects the optimizer inserts above the star scans (the flat table is
     # auto-demoted from the outputs once extractors chain onto it)
@@ -252,11 +256,15 @@ def test_flatten_extract_one_plan(dcir):
     flat, _ = flatten_star(DCIR_SCHEMA, dcir)
     for name, ex in [("drugs", drug_dispenses()), ("acts", medical_acts_dcir())]:
         _assert_tables_equal(ex(flat), res.events[name])
-    # per-join stats land in the OperationLog automatically
+    # per-join stats land in the OperationLog automatically — the
+    # eliminated join's audit survives as its key_count entry
     join_entries = [e for e in res.log.entries
                     if e["op"].startswith("plan:lookup_join")]
-    assert len(join_entries) == 3
-    for e in join_entries:
+    assert len(join_entries) == 2
+    kc_entries = [e for e in res.log.entries
+                  if e["op"].startswith("plan:key_count")]
+    assert len(kc_entries) == 1
+    for e in join_entries + kc_entries:
         assert e["params"]["overflow"] == 0
         assert e["params"]["key_sum_in"] == e["params"]["key_sum_out"]
 

@@ -32,7 +32,7 @@ _KEEP = (
     "required_columns", "engine", "bitset_block", "bitset_word", "left_key",
     "right_key", "prefix", "key", "col", "keys", "name", "fn", "category",
     "value_col", "start_col", "end_col", "group_col", "weight_col", "kind",
-    "null_cols", "lo", "hi", "columns",
+    "null_cols", "lo", "hi", "columns", "valid_layout",
 )
 
 
@@ -148,6 +148,12 @@ def test_snapshot_captures_engines_and_pruning():
     masks = [n for n in snap["nodes"] if n["op"] == "fused_mask"]
     assert all(m["params"].get("engine") == "pallas" for m in masks)
     assert all(m["params"].get("bitset_block") == 1024 for m in masks)
+    # bitset-native validity: predicate + compact nodes carry the layout
+    # stamp, and the pruned-to-key IR_BEN join is eliminated to a key_count
+    layered = [n for n in snap["nodes"] if n["op"] in ("fused_mask", "compact")]
+    assert layered and all(
+        n["params"].get("valid_layout") == "bitset_u32" for n in layered)
+    assert "key_count" in ops
     pruned = [n for n in snap["nodes"]
               if n["op"] == "select" and n["params"].get("pruned_columns")]
     assert pruned, "quickstart plan should prune unused dimension columns"
