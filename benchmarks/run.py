@@ -181,6 +181,49 @@ def bench_bitset(n_patients: int = 2_000, repeats: int = 3) -> None:
                 f"{r['mask_bytes_bool']})")
 
 
+def bench_serving(n_patients: int = 2_000, n_queries: int = 32) -> None:
+    """Cohort-query-service gate: under a mixed multi-tenant workload the
+    service must (a) stay bit-identical to solo runs, (b) compile at most
+    one executable per plan shape — vs one per query naively, (c) serve at
+    least half the cacheable subgraphs from the cross-tenant cache, and
+    (d) beat the sequential naive wall-clock.  Emits ``BENCH_serving.json``."""
+    import json
+
+    from benchmarks import serving_bench
+
+    rows = serving_bench.run(n_patients=n_patients, n_queries=n_queries)
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _emit(
+            f"serving.{r['name']}",
+            r["service_total_s"] * 1e6,
+            f"naive_s={r['naive_total_s']} speedup={r['speedup']}x "
+            f"compiles={r['service_compiles']}/{r['naive_compiles']} "
+            f"hit_rate={r['hit_rate']} p50={r['service_p50_s']}s "
+            f"p95={r['service_p95_s']}s parity={r['parity']}",
+        )
+        if r["parity"] != "pass":
+            raise SystemExit(
+                f"serving.{r['name']}: service/solo result parity FAILED — "
+                "served queries diverged from solo Study.run")
+        if not (r["service_compiles"] <= r["n_shapes"]
+                < r["naive_compiles"]):
+            raise SystemExit(
+                f"serving.{r['name']}: shared-plan reuse did not cut "
+                f"compiles ({r['service_compiles']} executables for "
+                f"{r['n_queries']} queries vs naive {r['naive_compiles']})")
+        if r["hit_rate"] < 0.5:
+            raise SystemExit(
+                f"serving.{r['name']}: subgraph-cache hit rate "
+                f"{r['hit_rate']} < 0.5")
+        if r["service_total_s"] >= r["naive_total_s"]:
+            raise SystemExit(
+                f"serving.{r['name']}: service wall-clock did not beat the "
+                f"sequential naive path ({r['service_total_s']}s >= "
+                f"{r['naive_total_s']}s)")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -224,6 +267,7 @@ def main() -> None:
         bench_predicate(n_patients=500, repeats=2)
         bench_bitset(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
+        bench_serving(n_patients=500)
         return
     bench_table1()
     bench_flattening()
@@ -233,6 +277,7 @@ def main() -> None:
     bench_bitset()
     bench_fig3()
     bench_study()
+    bench_serving()
     bench_roofline()
 
 

@@ -250,18 +250,29 @@ class ColumnarTable:
         return ColumnarTable(cols, valid, valid.sum().astype(jnp.int32))
 
     def sort_by(self, names: Sequence[str]) -> "ColumnarTable":
-        """Stable lexicographic sort; invalid rows sink to the end."""
-        vb = self.valid_bool()
+        """Stable lexicographic sort; invalid rows sink to the end.
+
+        Bitset-native: the per-row validity bit is gathered straight from
+        the packed words (``bitset.bit_at`` — 1 bit/row of HBM, no bool
+        column) and folded into the sort keys.  Because invalid rows sink,
+        the sorted validity is exactly "first ``count`` rows" — emitted
+        word-wise via ``bitset.first_n``, so the sort boundary never expands
+        or re-packs a bool mask."""
+        if self.capacity == 0:
+            return self
+        rows = jnp.arange(self.capacity, dtype=jnp.int32)
+        bit = _bs.bit_at(self.valid, rows)
         keys = []
         for n in reversed(list(names)):  # lexsort: LAST key is primary
             col = self.columns[n]
-            keys.append(jnp.where(vb, col, _max_key(col.dtype)))
+            keys.append(jnp.where(bit, col, _max_key(col.dtype)))
         # Most-significant key: invalid rows sink last even if a valid row
         # happens to carry the max key value.
-        keys.append((~vb).astype(jnp.int32))
+        keys.append((~bit).astype(jnp.int32))
         idx = jnp.lexsort(tuple(keys))
         cols = {k: v[idx] for k, v in self.columns.items()}
-        return ColumnarTable(cols, vb[idx], self.count, self.capacity)
+        return ColumnarTable(cols, _bs.first_n(self.count, self.capacity),
+                             self.count, self.capacity)
 
     def shrink_to(self, capacity: int) -> "ColumnarTable":
         """Truncate to a smaller static capacity (inverse of ``pad_to``).

@@ -46,15 +46,21 @@ def dedupe_by(table: ColumnarTable, keys: Sequence[str]) -> ColumnarTable:
 
     Needed because a denormalized 1:N flat table repeats parent attributes
     (e.g. one hospital stay appears once per diagnosis×act pair).
+
+    Word-wise validity: ``sort_by`` sinks invalid rows, so the sorted
+    table's valid rows are exactly the first ``count`` — row validity here
+    is an iota compare (no packed-word expansion), and the only new mask is
+    the data-derived run-head test ``filter`` packs at its boundary.
     """
     t = table.sort_by(list(keys))
-    tv = t.valid_bool()
+    tv = jnp.arange(t.capacity, dtype=jnp.int32) < t.count
     neq = jnp.zeros((t.capacity,), bool)
     for k in keys:
         col = t.columns[k]
         neq = neq | jnp.concatenate([jnp.ones((1,), bool), col[1:] != col[:-1]])
-    prev_valid = jnp.concatenate([jnp.zeros((1,), bool), tv[:-1]])
-    keep = tv & (neq | ~prev_valid)
+    # neq[0] is True, so every first-of-run valid row survives; rows past
+    # count (the sunk invalid tail) drop via tv
+    keep = tv & neq
     return t.filter(keep)
 
 

@@ -15,7 +15,8 @@ import numpy as np
 
 from repro.core.columnar import ColumnarTable
 
-__all__ = ["save_columnar", "load_columnar", "csv_size_bytes", "columnar_size_bytes"]
+__all__ = ["save_columnar", "load_columnar", "save_star", "load_star",
+           "csv_size_bytes", "columnar_size_bytes"]
 
 
 def save_columnar(table: ColumnarTable, path: str) -> int:
@@ -36,6 +37,24 @@ def load_columnar(path: str) -> ColumnarTable:
         cols = {k[5:]: z[k] for k in z.files if k.startswith("col::")}
         valid = z["__valid__"]
     return ColumnarTable.from_columns(cols, valid=valid)
+
+
+def save_star(tables: Dict[str, ColumnarTable], dirpath: str) -> Dict[str, int]:
+    """Persist a star schema (or any named table set) as one ``.npz`` per
+    table under ``dirpath``; returns per-table bytes on disk.  The on-disk
+    unit the cohort-query service loads a resident table version from."""
+    os.makedirs(dirpath, exist_ok=True)
+    return {name: save_columnar(t, os.path.join(dirpath, name))
+            for name, t in tables.items()}
+
+
+def load_star(dirpath: str) -> Dict[str, ColumnarTable]:
+    """Load every ``<name>.npz`` under ``dirpath`` as ``{name: table}``."""
+    out: Dict[str, ColumnarTable] = {}
+    for fname in sorted(os.listdir(dirpath)):
+        if fname.endswith(".npz"):
+            out[fname[:-4]] = load_columnar(os.path.join(dirpath, fname))
+    return out
 
 
 def csv_size_bytes(table: ColumnarTable) -> int:

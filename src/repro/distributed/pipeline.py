@@ -24,7 +24,21 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["gpipe", "pipeline_transformer", "compat_shard_map",
-           "execute_plan_sharded"]
+           "execute_plan_sharded", "pad_tables_for_mesh"]
+
+
+def pad_tables_for_mesh(tables, n_shards: int):
+    """Pad table capacities to a multiple of ``32 * n_shards`` so the packed
+    uint32 validity words split across the mesh axis exactly on shard row
+    boundaries (each shard's word slice is the bitset of its local rows).
+    Idempotent — already-padded tables pass through untouched — so resident
+    table sets (``study.service``) can pre-pad once at load time."""
+    quantum = 32 * int(n_shards)
+    out = {}
+    for name, t in tables.items():
+        cap = -(-t.capacity // quantum) * quantum
+        out[name] = t.pad_to(cap) if cap != t.capacity else t
+    return out
 
 
 def compat_shard_map(f: Callable, mesh: Mesh, in_specs, out_specs):
@@ -155,12 +169,7 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
     from repro.study.plan import COHORT_OPS, TABLE_OPS
 
     n = mesh.shape[axis_name]
-    quantum = 32 * n                 # word-aligned shard blocks (see above)
-    env = {}
-    for src in plan.sources():
-        t = tables[src]
-        cap = -(-t.capacity // quantum) * quantum
-        env[src] = t.pad_to(cap) if cap != t.capacity else t
+    env = pad_tables_for_mesh({src: tables[src] for src in plan.sources()}, n)
     cols_in = {s: dict(t.columns) for s, t in env.items()}
     valid_in = {s: t.valid for s, t in env.items()}
 

@@ -5,12 +5,18 @@ slots (their prompt prefilled into the slot's cache region via the decode
 path), and every engine step decodes one token for all live slots.  Fixed
 shapes keep a single compiled executable — finished slots are simply masked
 and re-admitted, so there is no recompilation at 1000-node scale.
+
+``SlotScheduler`` is the admission policy factored out of the batcher —
+bounded in-flight window, FIFO-within-priority queue, optional per-key
+quotas — so the cohort-query service (``study.service``) shares one
+admission idiom with the token-serving engine instead of growing its own.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+import heapq
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +25,77 @@ import numpy as np
 from repro.models.registry import ModelBundle
 from repro.serving.serve_step import make_serve_step
 
-__all__ = ["Request", "ContinuousBatcher"]
+__all__ = ["Request", "ContinuousBatcher", "SlotScheduler"]
+
+
+class SlotScheduler:
+    """Slot-based admission: a bounded in-flight window over a FIFO-with-
+    priority queue, with optional per-key (per-tenant) in-flight quotas and a
+    bounded queue depth.
+
+    Items are ``submit``-ted with a key and a priority; ``admit`` moves as
+    many queued items as free slots (and quotas) allow, in priority order
+    (higher first) then submission order; ``release(key)`` retires one slot.
+    Over-quota items stay queued *in place* — later items of other keys may
+    overtake them, but order within a key is always FIFO.
+    """
+
+    def __init__(self, n_slots: int, per_key_quota: Optional[int] = None,
+                 max_queue: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = int(n_slots)
+        self.per_key_quota = per_key_quota
+        self.max_queue = max_queue
+        self._heap: List[Tuple[int, int, Any, Any]] = []  # (-prio, seq, key, item)
+        self._seq = itertools.count()
+        self._inflight: Dict[Any, int] = {}
+        self._live = 0
+
+    def queued(self) -> int:
+        return len(self._heap)
+
+    def inflight(self) -> int:
+        return self._live
+
+    def submit(self, item: Any, key: Any = None, priority: int = 0) -> bool:
+        """Enqueue; returns False (rejecting the item) when the queue is
+        at ``max_queue`` depth."""
+        if self.max_queue is not None and len(self._heap) >= self.max_queue:
+            return False
+        heapq.heappush(self._heap,
+                       (-int(priority), next(self._seq), key, item))
+        return True
+
+    def admit(self) -> List[Tuple[Any, Any]]:
+        """Fill free slots from the queue; returns admitted ``(item, key)``
+        pairs in admission order."""
+        admitted: List[Tuple[Any, Any]] = []
+        skipped: List[Tuple[int, int, Any, Any]] = []
+        while self._heap and self._live < self.n_slots:
+            entry = heapq.heappop(self._heap)
+            _, _, key, item = entry
+            if (self.per_key_quota is not None
+                    and self._inflight.get(key, 0) >= self.per_key_quota):
+                skipped.append(entry)     # over quota: stays queued in place
+                continue
+            self._inflight[key] = self._inflight.get(key, 0) + 1
+            self._live += 1
+            admitted.append((item, key))
+        for entry in skipped:
+            heapq.heappush(self._heap, entry)
+        return admitted
+
+    def release(self, key: Any = None) -> None:
+        """Retire one in-flight item admitted under ``key``."""
+        if self._live <= 0:
+            raise RuntimeError("release() without a live admission")
+        self._live -= 1
+        left = self._inflight.get(key, 0) - 1
+        if left > 0:
+            self._inflight[key] = left
+        else:
+            self._inflight.pop(key, None)
 
 
 @dataclasses.dataclass
@@ -42,27 +118,26 @@ class ContinuousBatcher:
         self.cache = bundle.init_cache(n_slots, kv_len)
         self.step_fn = jax.jit(make_serve_step(bundle, sample=True),
                                donate_argnums=(1,))
-        self.queue: Deque[Request] = deque()
+        self.sched = SlotScheduler(n_slots)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
         self.slot_remaining = np.zeros(n_slots, np.int32)
         self.cur_token = np.zeros(n_slots, np.int32)
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.sched.submit(req, key=req.rid)
 
     def _admit(self) -> None:
-        for i in range(self.n_slots):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = req
-                # prefill the prompt token-by-token through the decode path
-                # (slot-local; production would use a bulk prefill kernel)
-                for t, tok in enumerate(req.prompt[:-1]):
-                    self._single_token(i, tok, t)
-                self.slot_pos[i] = len(req.prompt) - 1
-                self.cur_token[i] = req.prompt[-1]
-                self.slot_remaining[i] = req.max_new
+        for req, _ in self.sched.admit():
+            i = next(j for j in range(self.n_slots) if self.slots[j] is None)
+            self.slots[i] = req
+            # prefill the prompt token-by-token through the decode path
+            # (slot-local; production would use a bulk prefill kernel)
+            for t, tok in enumerate(req.prompt[:-1]):
+                self._single_token(i, tok, t)
+            self.slot_pos[i] = len(req.prompt) - 1
+            self.cur_token[i] = req.prompt[-1]
+            self.slot_remaining[i] = req.max_new
 
     def _single_token(self, slot: int, token: int, pos: int) -> None:
         toks = np.zeros((self.n_slots, 1), np.int32)
@@ -95,9 +170,10 @@ class ContinuousBatcher:
                     or self.slot_pos[i] >= self.kv_len - 1:
                 req.done = True
                 self.slots[i] = None
+                self.sched.release(req.rid)
         return len(live)
 
     def run(self, max_steps: int = 1_000) -> None:
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if not self.step() and not self.sched.queued():
                 break

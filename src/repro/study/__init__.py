@@ -7,6 +7,12 @@ into single-pass masks, shares source scans, defers compaction and prunes
 unread columns backwards through the flatten joins; ``execute`` (executor)
 jit-compiles the plan once per (structure, table spec, engine) and
 auto-records ``OperationLog`` provenance, including per-stage column audits.
+
+``normalize`` canonicalizes optimized plans (literal hoisting, stable order,
+label stripping) so structurally-equal queries share one executable;
+``CohortQueryService`` (service) serves many tenants' studies against one
+resident star schema with plan-normalized jit sharing and a cross-tenant
+subgraph result cache.
 """
 from repro.study.plan import Node, Plan, PlanBuilder
 from repro.study.expr import (
@@ -23,6 +29,13 @@ from repro.study.api import (
     Study, StudyResult, contribute_flatten, contribute_flatten_sliced,
     flow_rows_from_log, column_audit_from_log,
 )
+from repro.study.normalize import (
+    NormalPlan, normalize, device_params, params_signature, cut_points,
+    subgraph_hashes,
+)
+from repro.study.service import (
+    CohortQueryService, ServiceConfig, ServiceStats, TenantStats, QueryTicket,
+)
 
 __all__ = [
     "Node", "Plan", "PlanBuilder",
@@ -34,4 +47,8 @@ __all__ = [
     "execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache",
     "Study", "StudyResult", "contribute_flatten", "contribute_flatten_sliced",
     "flow_rows_from_log", "column_audit_from_log",
+    "NormalPlan", "normalize", "device_params", "params_signature",
+    "cut_points", "subgraph_hashes",
+    "CohortQueryService", "ServiceConfig", "ServiceStats", "TenantStats",
+    "QueryTicket",
 ]

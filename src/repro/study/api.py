@@ -433,7 +433,18 @@ class Study:
                                      predicate_engine=predicate_engine)
         for i, d in join_stats.items():
             d.setdefault("stage", plan.nodes[i].label())
+        return self._finish_result(plan, vals, join_stats, log)
 
+    def _finish_result(self, plan: Plan, vals: Dict[int, Any],
+                       join_stats: Dict[int, Dict[str, int]],
+                       log: OperationLog) -> StudyResult:
+        """Realize a StudyResult from executed node values: events from named
+        table outputs, cohorts by replaying the algebra on wrapped operands,
+        then the host ops (flow/featurize).  ``vals`` must cover
+        ``executor.keep_ids(plan)`` — exactly what ``execute`` (or the
+        service's cached runner, after mapping canonical ids back) returns.
+        Factored out of ``run`` so ``study.service`` produces bit-identical
+        results through the same realization code."""
         nodes = plan.nodes
         out_ids = plan.output_ids
         events = {name: vals[i] for name, i in out_ids.items()

@@ -55,14 +55,21 @@ def _registry() -> Dict[str, Tuple[Callable, bool]]:
 TRANSFORMS = _registry()
 
 _JIT_CACHE: Dict[Tuple, Callable] = {}
+_JIT_STATS: Dict[str, int] = {"compiles": 0, "hits": 0}
 
 
 def jit_cache_info() -> Dict[str, int]:
-    return {"plans": len(_JIT_CACHE)}
+    """Cache-surface audit: ``plans`` (live entries), ``compiles`` (traced
+    closures built — the executable count the serving layer budgets), and
+    ``hits`` (runner lookups served by an existing entry).  Counters reset
+    with ``clear_jit_cache``."""
+    return {"plans": len(_JIT_CACHE), **_JIT_STATS}
 
 
 def clear_jit_cache() -> None:
     _JIT_CACHE.clear()
+    _JIT_STATS["compiles"] = 0
+    _JIT_STATS["hits"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -319,16 +326,21 @@ def run_plan_body(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
 
 
 def _jitted_runner(plan: Plan, n_patients: int, engine: str,
-                   predicate_engine: Optional[str] = None) -> Callable:
+                   predicate_engine: Optional[str] = None,
+                   params_sig: Optional[Tuple] = None) -> Callable:
     peng = _pk.resolve_engine(predicate_engine, engine)
-    key = (plan.key(), n_patients, engine, peng)
+    key = (plan.key(), n_patients, engine, peng, params_sig)
     fn = _JIT_CACHE.get(key)
     if fn is None:
+        _JIT_STATS["compiles"] += 1
         keep = keep_ids(plan)
 
-        def body(env):
-            vals, counts, stats = run_plan_body(plan, env, n_patients, engine,
-                                                predicate_engine=peng)
+        def run(env, lits=(), vecs=()):
+            # hoisted-literal slots (normalized plans) read the traced
+            # lits/vecs arguments; plans with baked literals ignore them
+            with _expr.bound_params(lits, vecs):
+                vals, counts, stats = run_plan_body(
+                    plan, env, n_patients, engine, predicate_engine=peng)
             # counts leave as ONE stacked vector: a single host transfer for
             # provenance instead of one device sync per node.
             ids = tuple(sorted(counts))
@@ -336,8 +348,17 @@ def _jitted_runner(plan: Plan, n_patients: int, engine: str,
                     jnp.stack([counts[i] for i in ids]),
                     stats)
 
+        if params_sig is None:
+            def body(env):
+                return run(env)
+        else:
+            def body(env, lits, vecs):
+                return run(env, lits, vecs)
+
         fn = jax.jit(body)
         _JIT_CACHE[key] = fn
+    else:
+        _JIT_STATS["hits"] += 1
     return fn
 
 
@@ -350,7 +371,8 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
             engine: str = "xla", log: Optional[OperationLog] = None,
             jit: bool = True,
             stats_sink: Optional[Dict[int, Dict[str, int]]] = None,
-            predicate_engine: Optional[str] = None
+            predicate_engine: Optional[str] = None,
+            expr_params: Optional[Tuple[Tuple, Tuple]] = None
             ) -> Dict[int, Any]:
     """Evaluate every array-valued node of ``plan`` over ``tables``.
 
@@ -363,6 +385,11 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
     id.  ``predicate_engine`` ("jnp" | "pallas" | "auto"/None) picks how
     un-stamped predicate nodes evaluate — jnp mask algebra or the Pallas
     Expr->bitset kernel; nodes the optimizer stamped keep their engine.
+    ``expr_params`` is the ``(lits, vecs)`` pair backing a *normalized*
+    plan's hoisted-literal slots (see ``study.normalize``): the values enter
+    the compiled program as traced arguments, so the jit cache keys only on
+    their shape/dtype signature — same structure + different literals reuses
+    one executable.
     """
     missing = [s for s in plan.sources() if s not in tables]
     if missing:
@@ -370,13 +397,25 @@ def execute(plan: Plan, tables: Dict[str, ColumnarTable], n_patients: int = 0,
                        f"{sorted(tables)}")
     env = {src: tables[src] for src in plan.sources()}
     if jit:
-        vals, counts_vec, stats = _jitted_runner(
-            plan, n_patients, engine, predicate_engine)(env)
+        if expr_params is None:
+            fn, args = _jitted_runner(
+                plan, n_patients, engine, predicate_engine), (env,)
+        else:
+            from repro.study.normalize import params_signature
+
+            lits, vecs = expr_params
+            fn = _jitted_runner(plan, n_patients, engine, predicate_engine,
+                                params_sig=params_signature(lits, vecs))
+            args = (env, tuple(lits), tuple(vecs))
+        vals, counts_vec, stats = fn(*args)
         counts = dict(zip(traced_ids(plan),
                           (int(c) for c in np.asarray(counts_vec))))
     else:
-        vals, counts_dev, stats = run_plan_body(
-            plan, env, n_patients, engine, predicate_engine=predicate_engine)
+        lits, vecs = expr_params or ((), ())
+        with _expr.bound_params(lits, vecs):
+            vals, counts_dev, stats = run_plan_body(
+                plan, env, n_patients, engine,
+                predicate_engine=predicate_engine)
         vals = {i: vals[i] for i in keep_ids(plan)}
         counts = {i: int(c) for i, c in counts_dev.items()}
     if log is not None or stats_sink is not None:

@@ -31,10 +31,12 @@ lowered by ``Study.cohort`` onto the same plan machinery.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import operator as _op
-from typing import Any, Callable, Iterable, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple, \
+    Union
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +47,7 @@ from repro.core.columnar import ColumnarTable, is_null
 __all__ = [
     "Expr", "Col", "Lit", "col", "lit", "all_of", "any_of",
     "expr_from_param", "fused_predicate", "node_predicate",
+    "HoistedLit", "HoistedIsIn", "bound_params",
     "CohortRef", "CohortCombine", "parse_cohort_expr",
 ]
 
@@ -364,6 +367,107 @@ class NullTest(Expr):
 
 
 # ---------------------------------------------------------------------------
+# hoisted literals (plan normalization)
+# ---------------------------------------------------------------------------
+# Binding stack for hoisted literal slots.  ``normalize.normalize`` rewrites
+# ``("lit", v)`` / ``("isin", x, values)`` leaves into slot references so
+# structurally-equal plans from different tenants serialize identically; the
+# actual values are passed to the compiled program as *traced arguments* and
+# bound here for the duration of one trace/evaluation.  The stack is consulted
+# synchronously while jax traces the jitted body, so a plain module-level
+# stack (no thread-locals) matches how the executor drives tracing.
+_BOUND_PARAMS: List[Tuple[Sequence, Sequence]] = []
+
+
+@contextlib.contextmanager
+def bound_params(lits: Sequence, vecs: Sequence):
+    """Bind the literal/whitelist vectors hoisted-Expr slots read from.
+
+    ``lits[i]`` backs ``HoistedLit(slot=i)`` (a scalar, possibly traced);
+    ``vecs[j]`` backs ``HoistedIsIn(slot=j)`` (a 1-D whitelist array)."""
+    _BOUND_PARAMS.append((tuple(lits), tuple(vecs)))
+    try:
+        yield
+    finally:
+        _BOUND_PARAMS.pop()
+
+
+def _bound(kind: int, slot: int):
+    if not _BOUND_PARAMS:
+        raise RuntimeError(
+            "hoisted Expr evaluated outside expr.bound_params(...); "
+            "normalized plans need their literal vector bound at execution")
+    vec = _BOUND_PARAMS[-1][kind]
+    if slot >= len(vec):
+        raise IndexError(f"hoisted slot {slot} out of range "
+                         f"({len(vec)} bound)")
+    return vec[slot]
+
+
+class HoistedLit(Expr):
+    """A scalar literal hoisted out of the plan into params slot ``slot``.
+
+    Serializes as ``("hlit", slot)`` — no value — so plans differing only in
+    literal values share one structural key (and one compiled executable);
+    the value arrives as a traced scalar via ``bound_params``."""
+
+    __slots__ = ("slot",)
+
+    def __init__(self, slot: int):
+        object.__setattr__(self, "slot", int(slot))
+
+    def __setattr__(self, *a):
+        raise AttributeError("Expr nodes are immutable")
+
+    def required_columns(self):
+        return frozenset()
+
+    def to_param(self):
+        return ("hlit", self.slot)
+
+    def evaluate(self, table):
+        return _bound(0, self.slot)
+
+    def __repr__(self):
+        return f"?{self.slot}"
+
+
+class HoistedIsIn(Expr):
+    """Set membership against a hoisted whitelist (params slot ``slot``).
+
+    The whitelist *size* and element kind stay structural (``n``,
+    ``isfloat`` — they fix the traced vector's shape/dtype); the member
+    values travel in the params vector.  An empty whitelist matches nothing,
+    mirroring ``IsIn``."""
+
+    __slots__ = ("x", "slot", "n", "isfloat")
+
+    def __init__(self, x: Expr, slot: int, n: int, isfloat: bool):
+        object.__setattr__(self, "x", x)
+        object.__setattr__(self, "slot", int(slot))
+        object.__setattr__(self, "n", int(n))
+        object.__setattr__(self, "isfloat", bool(isfloat))
+
+    def __setattr__(self, *a):
+        raise AttributeError("Expr nodes are immutable")
+
+    def required_columns(self):
+        return self.x.required_columns()
+
+    def to_param(self):
+        return ("hisin", self.x.to_param(), self.slot, self.n, self.isfloat)
+
+    def evaluate(self, table):
+        v = self.x.evaluate(table)
+        if self.n == 0:  # empty whitelist matches nothing
+            return jnp.zeros(jnp.shape(v), bool)
+        return jnp.isin(v, _bound(1, self.slot))
+
+    def __repr__(self):
+        return f"{self.x!r} in ?set{self.slot}<{self.n}>"
+
+
+# ---------------------------------------------------------------------------
 # factories / combinators
 # ---------------------------------------------------------------------------
 def col(name: str) -> Col:
@@ -408,6 +512,10 @@ def expr_from_param(p: Tuple) -> Expr:
         return Not(expr_from_param(p[1]))
     if tag == "isin":
         return IsIn(expr_from_param(p[1]), p[2])
+    if tag == "hlit":
+        return HoistedLit(p[1])
+    if tag == "hisin":
+        return HoistedIsIn(expr_from_param(p[1]), p[2], p[3], p[4])
     if tag == "isnull":
         return NullTest(expr_from_param(p[1]), negate=False)
     if tag == "notnull":

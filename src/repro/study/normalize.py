@@ -1,0 +1,315 @@
+"""Plan normalization: canonical form for cross-tenant executable sharing.
+
+The executor's jit cache keys on ``Plan.key()`` — the full node tuple — so
+two tenants asking the *same question with different constants* ("dispenses
+of drug 17" vs "drug 23") compile two executables: the literals are baked
+into the node params.  ``normalize`` rewrites an optimized plan into a
+canonical form where that no longer happens:
+
+  * **literal hoisting** — every ``("lit", v)`` leaf and every ``("isin", x,
+    values)`` whitelist inside predicate exprs is replaced by a slot
+    reference (``("hlit", i)`` / ``("hisin", x, j, n, isfloat)``); the values
+    move into a params vector (``NormalPlan.lits`` / ``.vecs``) passed to the
+    compiled program as *traced arguments* (``expr.bound_params``).  Only
+    shape-bearing constants stay structural: whitelist sizes, ``slice_time``
+    bounds (they feed the capacity planner) and planned capacities.
+  * **alpha-renaming** — tenant-chosen labels are stripped (node ``name``
+    params dropped, output names rewritten ``o0, o1, ...`` in canonical
+    order).  Column refs are *not* renamed: every tenant queries the same
+    resident star schema, so column names are shared vocabulary, not
+    tenant-local naming.
+  * **stable node ordering** — nodes re-emit in a deterministic order
+    (post-order DFS from the outputs, outputs visited by structural hash),
+    so builder-order differences between equivalent studies disappear.
+  * **conjunct canonicalization** — a ``fused_mask``'s legacy ``null_cols``/
+    ``filters`` conjuncts are folded into its ``exprs`` list (in the exact
+    order ``expr.fused_predicate`` evaluates them), so equal predicates
+    serialize equally regardless of how they were built.
+
+Hoisted predicates evaluate through the jnp mask engine: the Pallas
+Expr->bitset codegen specializes on literal values, so nodes stamped
+``engine="pallas"`` are demoted to ``"jnp"`` when hoisting touches them
+(a normalized plan trades the fused kernel for cross-tenant compile sharing;
+see ROADMAP for the value-generic kernel follow-on).
+
+The module also provides the service's subgraph identity: ``cut_points``
+picks the structurally cacheable nodes (scan/predicate/join prefixes) and
+``subgraph_hashes`` content-hashes each node's subtree *with the literal
+values resolved back in*, so a cache hit means "this exact computation over
+this exact table version".
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.study.plan import Node, Plan, PlanBuilder, PREDICATE_OPS
+
+__all__ = ["NormalPlan", "normalize", "device_params", "params_signature",
+           "cut_points", "subgraph_hashes", "CACHEABLE_OPS", "CUT_OPS"]
+
+
+# ---------------------------------------------------------------------------
+# expr-param rewriting helpers
+# ---------------------------------------------------------------------------
+_EXPR_KEYS = ("expr",)        # params holding ONE serialized Expr
+_EXPRS_KEYS = ("exprs",)      # params holding a tuple of serialized Exprs
+
+
+def _isfloat(values: Sequence) -> bool:
+    return any(isinstance(c, float) for c in values)
+
+
+def _scrub_expr(p: Tuple) -> Tuple:
+    """Literal-free view of an expr param (for structural hashing): values
+    are dropped, shape-bearing facts (whitelist size/kind) kept."""
+    tag = p[0]
+    if tag == "lit":
+        return ("lit?",)
+    if tag == "isin":
+        return ("isin?", _scrub_expr(p[1]), len(p[2]), _isfloat(p[2]))
+    if tag in ("cmp", "arith", "bool"):
+        return (tag, p[1], _scrub_expr(p[2]), _scrub_expr(p[3]))
+    if tag in ("not", "isnull", "notnull"):
+        return (tag, _scrub_expr(p[1]))
+    if tag == "hisin":
+        return ("hisin", _scrub_expr(p[1]), p[2], p[3], p[4])
+    return p  # col / hlit — already value-free
+
+
+def _hoist_expr(p: Tuple, lits: List, vecs: List) -> Tuple:
+    """Rewrite an expr param: literals -> slot refs, values appended to the
+    growing ``lits``/``vecs`` vectors (depth-first, left-to-right — the slot
+    order is part of the canonical form)."""
+    tag = p[0]
+    if tag == "lit":
+        lits.append(p[1])
+        return ("hlit", len(lits) - 1)
+    if tag == "isin":
+        inner = _hoist_expr(p[1], lits, vecs)
+        vecs.append(tuple(p[2]))
+        return ("hisin", inner, len(vecs) - 1, len(p[2]), _isfloat(p[2]))
+    if tag in ("cmp", "arith", "bool"):
+        return (tag, p[1], _hoist_expr(p[2], lits, vecs),
+                _hoist_expr(p[3], lits, vecs))
+    if tag in ("not", "isnull", "notnull"):
+        return (tag, _hoist_expr(p[1], lits, vecs))
+    return p  # col — nothing to hoist; hlit/hisin pass through untouched
+
+
+def _has_hoisted(p: Tuple) -> bool:
+    if not isinstance(p, tuple):
+        return False
+    if p and p[0] in ("hlit", "hisin"):
+        return True
+    return any(_has_hoisted(x) for x in p)
+
+
+def _resolve_expr(p: Tuple, lits: Sequence, vecs: Sequence) -> Tuple:
+    """Inverse of hoisting (for content hashing): slot refs -> concrete
+    values."""
+    tag = p[0]
+    if tag == "hlit":
+        return ("lit", lits[p[1]])
+    if tag == "hisin":
+        return ("isin", _resolve_expr(p[1], lits, vecs), tuple(vecs[p[2]]))
+    if tag == "isin":
+        return ("isin", _resolve_expr(p[1], lits, vecs), p[2])
+    if tag in ("cmp", "arith", "bool"):
+        return (tag, p[1], _resolve_expr(p[2], lits, vecs),
+                _resolve_expr(p[3], lits, vecs))
+    if tag in ("not", "isnull", "notnull"):
+        return (tag, _resolve_expr(p[1], lits, vecs))
+    return p
+
+
+def _canonical_param_items(node: Node) -> List[Tuple[str, Any]]:
+    """Node params with tenant labels removed and fused_mask conjuncts folded
+    into ``exprs`` (mirroring ``expr.fused_predicate``'s evaluation order:
+    null tests, whitelist filters, then exprs)."""
+    items = [(k, v) for k, v in node.params if k != "name"]
+    if node.op == "fused_mask":
+        d = dict(items)
+        exprs = []
+        exprs += [("notnull", ("col", c)) for c in (d.get("null_cols") or ())]
+        exprs += [("isin", ("col", c), tuple(codes))
+                  for c, codes in (d.get("filters") or ())]
+        exprs += list(d.get("exprs") or ())
+        d["exprs"] = tuple(exprs)
+        d["null_cols"] = ()
+        d["filters"] = ()
+        items = sorted(d.items())
+    return items
+
+
+# ---------------------------------------------------------------------------
+# normal form
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NormalPlan:
+    """A canonicalized plan plus the values normalization hoisted out of it.
+
+    ``plan.key()`` is the sharing unit: every structurally-equal query maps
+    to the same canonical plan, whatever its literals or labels.  ``lits``/
+    ``vecs`` carry this query's concrete values in slot order; ``node_map``
+    links original node ids to canonical ones (many-to-one — label stripping
+    can hash-cons formerly distinct nodes together) and ``out_map`` links
+    original output names to their ``oN`` aliases."""
+
+    plan: Plan
+    lits: Tuple
+    vecs: Tuple[Tuple, ...]
+    node_map: Tuple[Tuple[int, int], ...]
+    out_map: Tuple[Tuple[str, str], ...]
+
+    def orig_to_canon(self) -> Dict[int, int]:
+        return dict(self.node_map)
+
+
+def _structural_hashes(plan: Plan) -> List[str]:
+    hs: List[str] = []
+    for node in plan.nodes:
+        items = []
+        for k, v in _canonical_param_items(node):
+            if k in _EXPR_KEYS and v is not None:
+                v = _scrub_expr(v)
+            elif k in _EXPRS_KEYS and v is not None:
+                v = tuple(_scrub_expr(e) for e in v)
+            items.append((k, v))
+        blob = repr((node.op, tuple(items), tuple(hs[j] for j in node.inputs)))
+        hs.append(hashlib.sha1(blob.encode()).hexdigest())
+    return hs
+
+
+def normalize(plan: Plan) -> NormalPlan:
+    """Canonicalize an (optimized) plan for executable sharing.
+
+    Expects concrete literals (plans from ``Study.optimized_plan``); already-
+    hoisted slot refs pass through untouched, so feeding a canonical plan
+    back in is harmless but not a supported identity."""
+    hs = _structural_hashes(plan)
+    b = PlanBuilder()
+    lits: List = []
+    vecs: List[Tuple] = []
+    new_id: Dict[int, int] = {}
+
+    def emit(i: int) -> int:
+        if i in new_id:
+            return new_id[i]
+        node = plan.nodes[i]
+        ins = [emit(j) for j in node.inputs]
+        params: Dict[str, Any] = {}
+        for k, v in _canonical_param_items(node):
+            if k in _EXPR_KEYS and v is not None:
+                v = _hoist_expr(v, lits, vecs)
+            elif k in _EXPRS_KEYS and v is not None:
+                v = tuple(_hoist_expr(e, lits, vecs) for e in v)
+            params[k] = v
+        if (node.op in PREDICATE_OPS and params.get("engine") == "pallas"
+                and any(_has_hoisted(v) for k, v in params.items()
+                        if k in _EXPR_KEYS + _EXPRS_KEYS and v is not None)):
+            # the Pallas codegen specializes on literal values; hoisted
+            # predicates run the value-generic jnp engine instead
+            params["engine"] = "jnp"
+            params.pop("bitset_block", None)
+            params.pop("bitset_word", None)
+        nid = b.add(node.op, ins, **params)
+        new_id[i] = nid
+        return nid
+
+    # visit outputs in structural order (orig name only tie-breaks between
+    # scrub-identical subtrees, where either order yields the same structure)
+    out_map: List[Tuple[str, str]] = []
+    for k, (name, i) in enumerate(
+            sorted(plan.outputs, key=lambda o: (hs[o[1]], o[0]))):
+        canon_name = f"o{k}"
+        b.set_output(canon_name, emit(i))
+        out_map.append((name, canon_name))
+    return NormalPlan(plan=b.build(), lits=tuple(lits), vecs=tuple(vecs),
+                      node_map=tuple(sorted(new_id.items())),
+                      out_map=tuple(sorted(out_map)))
+
+
+# ---------------------------------------------------------------------------
+# device binding
+# ---------------------------------------------------------------------------
+def _lit_dtype(v):
+    if isinstance(v, bool):
+        return jnp.bool_
+    if isinstance(v, float):
+        return jnp.float32
+    return jnp.int32
+
+
+def device_params(nplan: NormalPlan) -> Tuple[Tuple, Tuple]:
+    """The ``(lits, vecs)`` traced-argument pytrees for a normalized plan,
+    in canonical dtypes (int32/float32/bool — matching what ``Lit``/``IsIn``
+    evaluation promotes to, so normalized results stay bit-identical)."""
+    lits = tuple(jnp.asarray(v, _lit_dtype(v)) for v in nplan.lits)
+    vecs = tuple(
+        jnp.asarray(np.asarray(v, np.float32 if _isfloat(v) else np.int32))
+        for v in nplan.vecs)
+    return lits, vecs
+
+
+def params_signature(lits: Sequence, vecs: Sequence) -> Tuple:
+    """Shape/dtype fingerprint of bound params — part of the executor's jit
+    key, so changing a literal *value* never recompiles but changing the
+    params *spec* (different slot count/kind) does."""
+    return (tuple(str(jnp.asarray(x).dtype) for x in lits),
+            tuple((int(np.shape(v)[0]), str(jnp.asarray(v).dtype))
+                  for v in vecs))
+
+
+# ---------------------------------------------------------------------------
+# subgraph identity (the service's result cache)
+# ---------------------------------------------------------------------------
+# ops whose value is a pure function of resident tables + the node subtree —
+# safe to serve from a cross-tenant cache.  transform/conform/compact/concat
+# stay out: cheap, or carrying realization-facing params not worth hashing.
+CACHEABLE_OPS = frozenset({
+    "scan", "scan_star", "select", "predicate", "drop_nulls", "value_filter",
+    "fused_mask", "lookup_join", "expand_join", "exchange", "slice_time",
+    "key_count", "dedupe",
+})
+# boundary ops worth materializing a cache entry at (heavy compute whose
+# output many tenants share: predicate bitsets, join results, dedupes)
+CUT_OPS = frozenset({
+    "predicate", "fused_mask", "lookup_join", "expand_join", "slice_time",
+    "key_count", "dedupe",
+})
+
+
+def cut_points(plan: Plan) -> Tuple[int, ...]:
+    """Node ids eligible for subgraph caching: every node whose transitive
+    subtree is cacheable and whose own op is a cut boundary.  Purely
+    structural — all queries sharing a canonical plan share cut points."""
+    ok: List[bool] = []
+    for node in plan.nodes:
+        ok.append(node.op in CACHEABLE_OPS and all(ok[j] for j in node.inputs))
+    return tuple(i for i, node in enumerate(plan.nodes)
+                 if ok[i] and node.op in CUT_OPS)
+
+
+def subgraph_hashes(nplan: NormalPlan, salt: Tuple = ()) -> Tuple[str, ...]:
+    """Content hash of every node's subtree with literal values resolved
+    back in — equal hash ⇒ identical computation over the same sources.
+    ``salt`` carries run-scoped identity (table version, engines,
+    n_patients, optimizer version)."""
+    hs: List[str] = []
+    for node in nplan.plan.nodes:
+        items = []
+        for k, v in node.params:
+            if k in _EXPR_KEYS and v is not None:
+                v = _resolve_expr(v, nplan.lits, nplan.vecs)
+            elif k in _EXPRS_KEYS and v is not None:
+                v = tuple(_resolve_expr(e, nplan.lits, nplan.vecs) for e in v)
+            items.append((k, v))
+        blob = repr((salt, node.op, tuple(items),
+                     tuple(hs[j] for j in node.inputs)))
+        hs.append(hashlib.sha256(blob.encode()).hexdigest())
+    return tuple(hs)

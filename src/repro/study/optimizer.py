@@ -52,7 +52,13 @@ from repro.study.plan import (JOIN_OPS, MASK_OPS, PREDICATE_OPS, Node, Plan,
 __all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction",
            "prune_columns", "eliminate_joins", "plan_capacities",
            "prune_exchanges", "dce", "assign_engines", "available_columns",
-           "required_columns"]
+           "required_columns", "OPTIMIZER_VERSION"]
+
+# Bumped whenever a pass changes what an optimized plan *means* for a given
+# builder-level study.  Cross-run caches keyed on optimized-plan content
+# (the service's subgraph result cache, normalization goldens) salt their
+# keys with this so stale entries die with the rewrite that produced them.
+OPTIMIZER_VERSION = 1
 
 # selects hanging off any of these get merged into one union projection
 _MERGE_UPSTREAM = frozenset({

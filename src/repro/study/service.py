@@ -1,0 +1,507 @@
+"""Multi-tenant cohort-query service: one resident star schema, many
+concurrent Study plans.
+
+SCALPEL3's end state is interactive cohort analysis over a population-scale
+claims database — many analysts (tenants) issuing structured cohort queries
+against one dataset that stays resident on the accelerator.  The PR 1–5
+stack stops at "one Study, one process"; ``CohortQueryService`` adds the
+serving layer in three tiers:
+
+1. **Admission + batching** — a ``serving.batching.SlotScheduler``: bounded
+   in-flight window (``n_slots``), FIFO-with-priority queueing, per-tenant
+   in-flight quotas, bounded queue depth (over-depth submissions are
+   *rejected*, not silently dropped).
+2. **Plan normalization** (``study.normalize``) — every admitted study's
+   optimized plan is canonicalized (stable order, labels stripped, literals
+   hoisted into a params vector), so structurally-equal queries from
+   different tenants share ONE compiled executable; the literals enter as
+   traced arguments.
+3. **Cross-tenant subgraph result cache** — each cacheable plan prefix
+   (scan/predicate/join subtrees, ``normalize.cut_points``) is
+   content-hashed with its literal values resolved back in and keyed by
+   table version; a shared scan or predicate bitset is computed once and
+   served from the cache for every later query, with LRU eviction under a
+   device-byte budget and wholesale invalidation on table-version bump.
+
+Cache injection without recompiles: the compiled program's structure must
+not depend on *which* cut nodes hit (that would fork executables per hit
+pattern), so each cut node's evaluation is wrapped in ``jax.lax.cond`` over
+a traced hit flag — on hit the provided cached table flows through, on miss
+the node computes in place.  XLA executes only the taken branch at runtime,
+and the flag is a traced scalar, so the hit pattern never retraces.
+
+Results are realized through ``Study._finish_result`` — the exact code path
+``Study.run`` uses — so every admitted query's events, cohorts, flowcharts
+and features are bit-identical to a solo run of the same study (the
+acceptance bar ``benchmarks/serving_bench.py`` gates on).
+
+Sharded residency: with ``mesh=`` the resident tables are pre-padded to the
+mesh word quantum (``distributed.pipeline.pad_tables_for_mesh``) and queries
+run through ``execute_plan_sharded``; normalization sharing and the subgraph
+cache currently apply to the local path only (the sharded plan cache already
+dedupes by structure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.columnar import ColumnarTable
+from repro.core.metadata import OperationLog
+from repro.kernels import predicate as _pk
+from repro.serving.batching import SlotScheduler
+from repro.study import executor as _executor
+# member imports, not `from repro.study import normalize`: the package
+# re-exports the normalize() function, shadowing the submodule attribute
+from repro.study.normalize import (
+    NormalPlan, cut_points, device_params, normalize, params_signature,
+    subgraph_hashes,
+)
+from repro.study.api import Study, StudyResult
+from repro.study.expr import bound_params
+from repro.study.optimizer import OPTIMIZER_VERSION
+from repro.study.plan import Plan, STATS_OPS
+
+__all__ = ["CohortQueryService", "ServiceConfig", "ServiceStats",
+           "TenantStats", "QueryTicket"]
+
+
+# ---------------------------------------------------------------------------
+# config / audit surface
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServiceConfig:
+    n_slots: int = 8                      # in-flight admission window
+    per_tenant_inflight: int = 2          # per-tenant quota within the window
+    max_queue: int = 256                  # queue depth; beyond this: reject
+    cache_budget_bytes: int = 256 << 20   # subgraph-cache LRU budget
+    engine: str = "xla"
+    predicate_engine: Optional[str] = None  # None/"auto" resolve by backend
+
+
+@dataclasses.dataclass
+class TenantStats:
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    failed: int = 0
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """The audit surface: per-tenant admission counts plus cache/compile
+    counters.  Mirrored into the service ``OperationLog`` per event."""
+
+    tenants: Dict[str, TenantStats] = dataclasses.field(default_factory=dict)
+    queries: int = 0
+    compile_count: int = 0            # distinct compiled executables built
+    cache_hits: int = 0               # cut subgraphs served from cache
+    cache_misses: int = 0             # cut subgraphs computed + inserted
+    cache_evictions: int = 0
+    cache_entries: int = 0
+    cache_bytes: int = 0
+    table_version: int = 0
+
+    def tenant(self, name: str) -> TenantStats:
+        return self.tenants.setdefault(name, TenantStats())
+
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "tenants": {k: dataclasses.asdict(v)
+                        for k, v in sorted(self.tenants.items())},
+            "queries": self.queries,
+            "compile_count": self.compile_count,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": round(self.hit_rate(), 4),
+            "cache_evictions": self.cache_evictions,
+            "cache_entries": self.cache_entries,
+            "cache_bytes": self.cache_bytes,
+            "table_version": self.table_version,
+        }
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One submitted study: filled in as it moves queued -> done/failed."""
+
+    tenant: str
+    study: Study
+    priority: int = 0
+    seq: int = -1
+    status: str = "queued"            # queued | rejected | done | failed
+    result: Optional[StudyResult] = None
+    error: Optional[BaseException] = None
+    cache_hits: int = 0
+    cache_misses: int = 0
+    compiled: bool = False            # this query built a new executable
+    latency_s: float = 0.0
+
+
+class _Count:
+    def __init__(self, c: int) -> None:
+        self.count = int(c)
+
+
+# ---------------------------------------------------------------------------
+# compiled shape programs + cache entries
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Program:
+    fn: Callable                       # jit(env, lits, vecs, cut_tabs, flags)
+    cut_ids: Tuple[int, ...]
+    zeros: Dict[int, Any]              # per-cut miss placeholder pytrees
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    value: Any                         # device ColumnarTable
+    stats: Optional[Dict[str, int]]    # host FlatteningStats (STATS_OPS cuts)
+    nbytes: int
+
+
+def _table_nbytes(t: ColumnarTable) -> int:
+    return int(sum(np.dtype(c.dtype).itemsize * int(np.prod(c.shape))
+                   for c in t.columns.values())
+               + np.dtype(t.valid.dtype).itemsize * int(np.prod(t.valid.shape))
+               + 4)
+
+
+def _zeros_like_struct(struct):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+
+# ---------------------------------------------------------------------------
+# the service
+# ---------------------------------------------------------------------------
+class CohortQueryService:
+    """Admit many tenants' Study plans against one resident table set.
+
+    Synchronous reference implementation: ``submit`` queues, ``step`` admits
+    one window and runs it, ``drain`` runs to empty.  See the module
+    docstring for the three-layer architecture.
+    """
+
+    def __init__(self, tables: Dict[str, ColumnarTable],
+                 table_version: int = 0,
+                 config: Optional[ServiceConfig] = None,
+                 mesh=None, axis_name: str = "data",
+                 log: Optional[OperationLog] = None):
+        self.config = config or ServiceConfig()
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.log = log if log is not None else OperationLog()
+        self.stats = ServiceStats(table_version=int(table_version))
+        self._version = int(table_version)
+        self._env: Dict[str, ColumnarTable] = {}
+        self._load_tables(tables)
+        self._sched = SlotScheduler(
+            self.config.n_slots,
+            per_key_quota=self.config.per_tenant_inflight,
+            max_queue=self.config.max_queue)
+        self._seq = 0
+        self._programs: Dict[Tuple, _Program] = {}
+        self._cache: "OrderedDict[str, _CacheEntry]" = OrderedDict()
+        self._cache_bytes = 0
+
+    @classmethod
+    def from_npz_dir(cls, dirpath: str, **kwargs) -> "CohortQueryService":
+        """Resident service over a star schema persisted by
+        ``data.io.save_star`` (one load per table version)."""
+        from repro.data.io import load_star
+
+        return cls(load_star(dirpath), **kwargs)
+
+    # -- residency -----------------------------------------------------------
+    def _load_tables(self, tables: Dict[str, ColumnarTable]) -> None:
+        if self.mesh is not None:
+            from repro.distributed.pipeline import pad_tables_for_mesh
+
+            tables = pad_tables_for_mesh(tables,
+                                         self.mesh.shape[self.axis_name])
+        # loaded ONCE per table version: device residency is the service's
+        # contract — queries never re-upload sources (leaf-wise device_put:
+        # ColumnarTable's pytree round-trip re-packs validity on unflatten)
+        self._env = {k: jax.tree.map(jax.device_put, t)
+                     for k, t in tables.items()}
+        self.log.record(
+            op="service:load_tables", inputs={},
+            outputs={k: _Count(int(t.count)) for k, t in tables.items()},
+            params={"version": self._version,
+                    "resident_bytes": sum(_table_nbytes(t)
+                                          for t in self._env.values())})
+
+    def update_tables(self, tables: Dict[str, ColumnarTable],
+                      version: Optional[int] = None) -> None:
+        """Install a new table version: re-residents the star schema, bumps
+        the version (invalidating every subgraph-cache entry — the version
+        salts the content hashes — and dropping the cached entries' bytes),
+        and discards shape programs (table capacities may have changed)."""
+        self._version = int(version) if version is not None \
+            else self._version + 1
+        self.stats.table_version = self._version
+        dropped = len(self._cache)
+        self._cache.clear()
+        self._cache_bytes = 0
+        self.stats.cache_entries = 0
+        self.stats.cache_bytes = 0
+        self._programs.clear()
+        self._load_tables(tables)
+        self.log.record(op="service:update_tables", inputs={}, outputs={},
+                        params={"version": self._version,
+                                "cache_dropped": dropped})
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, study: Study, tenant: str = "default",
+               priority: int = 0) -> QueryTicket:
+        """Queue a study for ``tenant``.  Returns its ticket immediately;
+        the ticket resolves during ``step``/``drain``.  Over-depth queues
+        reject (``status == "rejected"``)."""
+        t = QueryTicket(tenant=tenant, study=study, priority=int(priority),
+                        seq=self._seq)
+        self._seq += 1
+        ts = self.stats.tenant(tenant)
+        ts.submitted += 1
+        if not self._sched.submit(t, key=tenant, priority=priority):
+            t.status = "rejected"
+            ts.rejected += 1
+            self.log.record(op=f"service:reject:{tenant}", inputs={},
+                            outputs={}, params={"queued": self._sched.queued()})
+        return t
+
+    def step(self) -> int:
+        """Admit one window of queued tickets (priority order, per-tenant
+        quotas) and run them; returns the number admitted."""
+        admitted = self._sched.admit()
+        for ticket, tenant in admitted:
+            ts = self.stats.tenant(tenant)
+            ts.admitted += 1
+            try:
+                self._run_ticket(ticket)
+                ticket.status = "done"
+                ts.completed += 1
+            except Exception as e:  # noqa: BLE001 — isolate tenant failures
+                ticket.status = "failed"
+                ticket.error = e
+                ts.failed += 1
+                self.log.record(op=f"service:failed:{tenant}", inputs={},
+                                outputs={}, params={"error": repr(e)})
+            finally:
+                self._sched.release(tenant)
+        return len(admitted)
+
+    def drain(self) -> None:
+        """Run until the queue is empty."""
+        while self._sched.queued():
+            if not self.step():
+                break
+
+    def query(self, study: Study, tenant: str = "default",
+              priority: int = 0) -> StudyResult:
+        """Submit + drain convenience for single-query callers."""
+        t = self.submit(study, tenant=tenant, priority=priority)
+        self.drain()
+        if t.status == "rejected":
+            raise RuntimeError("query rejected: service queue is full")
+        if t.error is not None:
+            raise t.error
+        assert t.result is not None
+        return t.result
+
+    # -- execution -----------------------------------------------------------
+    def _run_ticket(self, ticket: QueryTicket) -> None:
+        t0 = time.perf_counter()
+        study = ticket.study
+        peng_arg = self.config.predicate_engine
+        plan = study.optimized_plan(tables=self._env,
+                                    predicate_engine=peng_arg or "auto",
+                                    engine=self.config.engine)
+        req_log = OperationLog()
+        if self.mesh is not None:
+            # sharded passthrough: the mesh plan cache dedupes by structure;
+            # normalization sharing + subgraph caching are local-path only
+            from repro.distributed.pipeline import execute_plan_sharded
+
+            vals, counts, join_stats = execute_plan_sharded(
+                plan, self._env, study.n_patients, self.mesh,
+                axis_name=self.axis_name, engine=self.config.engine,
+                predicate_engine=peng_arg)
+            _executor.record_plan(plan, counts, req_log, self.config.engine,
+                                  stats=join_stats, predicate_engine=peng_arg)
+        else:
+            vals, join_stats = self._run_local(ticket, study, plan)
+        for i, d in join_stats.items():
+            d.setdefault("stage", plan.nodes[i].label())
+        ticket.result = study._finish_result(plan, vals, join_stats, req_log)
+        ticket.latency_s = time.perf_counter() - t0
+        self.stats.queries += 1
+        self.log.record(
+            op=f"service:query:{ticket.tenant}", inputs={},
+            outputs={name: _Count(t.count)
+                     for name, t in ticket.result.events.items()},
+            params={"plan_nodes": len(plan.nodes),
+                    "cache_hits": ticket.cache_hits,
+                    "cache_misses": ticket.cache_misses,
+                    "compiled": ticket.compiled,
+                    "latency_us": round(ticket.latency_s * 1e6, 1)})
+
+    def _run_local(self, ticket: QueryTicket, study: Study, plan: Plan):
+        """Normalize -> shared executable -> subgraph cache -> canonical
+        values mapped back to the original plan's node ids."""
+        peng = _pk.resolve_engine(self.config.predicate_engine,
+                                  self.config.engine)
+        nplan = normalize(plan)
+        lits, vecs = device_params(nplan)
+        env = {s: self._env[s] for s in nplan.plan.sources()}
+        prog = self._program(ticket, nplan, study.n_patients, peng, env,
+                             lits, vecs)
+
+        salt = (self._version, study.n_patients, self.config.engine, peng,
+                OPTIMIZER_VERSION)
+        hashes = subgraph_hashes(nplan, salt=salt)
+        flags: Dict[int, Any] = {}
+        cut_tabs: Dict[int, Any] = {}
+        # entries pinned at lookup time: a later miss's insert may LRU-evict
+        # a hit of this very query, but its device value stays referenced
+        hit_entries: Dict[int, _CacheEntry] = {}
+        for i in prog.cut_ids:
+            entry = self._cache.get(hashes[i])
+            if entry is not None:
+                self._cache.move_to_end(hashes[i])
+                flags[i] = jnp.asarray(True)
+                cut_tabs[i] = entry.value
+                hit_entries[i] = entry
+            else:
+                flags[i] = jnp.asarray(False)
+                cut_tabs[i] = prog.zeros[i]
+
+        keep_vals, cut_vals, stats = prog.fn(env, lits, vecs, cut_tabs, flags)
+
+        host_stats = _executor._host_stats(stats)
+        for i in prog.cut_ids:
+            if i in hit_entries:
+                ticket.cache_hits += 1
+                self.stats.cache_hits += 1
+                if hit_entries[i].stats is not None:
+                    host_stats[i] = dict(hit_entries[i].stats)
+            else:
+                ticket.cache_misses += 1
+                self.stats.cache_misses += 1
+                self._insert(hashes[i], cut_vals[i], host_stats.get(i))
+
+        # canonical ids -> original ids (many-to-one on the canonical side)
+        vals = {}
+        stats_orig: Dict[int, Dict[str, int]] = {}
+        canon_of = nplan.orig_to_canon()
+        keep_orig = _executor.keep_ids(plan)
+        for oi in range(len(plan.nodes)):
+            ci = canon_of.get(oi)
+            if ci is None:
+                continue
+            if oi in keep_orig and ci in keep_vals:
+                vals[oi] = keep_vals[ci]
+            if ci in host_stats:
+                stats_orig[oi] = dict(host_stats[ci])
+        return vals, stats_orig
+
+    def _program(self, ticket: QueryTicket, nplan: NormalPlan,
+                 n_patients: int, peng: str, env, lits, vecs) -> _Program:
+        skey = (nplan.plan.key(), n_patients, self.config.engine, peng,
+                params_signature(lits, vecs))
+        prog = self._programs.get(skey)
+        if prog is not None:
+            return prog
+        plan = nplan.plan
+        engine = self.config.engine
+        cut_ids = cut_points(plan)
+        cut_set = frozenset(cut_ids)
+        keep = _executor.keep_ids(plan)
+        traced = _executor.traced_ids(plan)
+
+        def _cut_structs(env, lits, vecs):
+            with bound_params(lits, vecs):
+                vals, _, stats = _executor.run_plan_body(
+                    plan, env, n_patients, engine, predicate_engine=peng)
+            return {i: (vals[i], stats.get(i)) for i in cut_ids}
+
+        struct = jax.eval_shape(_cut_structs, env, lits, vecs)
+
+        def body(env, lits, vecs, cut_tabs, flags):
+            with bound_params(lits, vecs):
+                vals: Dict[int, Any] = {}
+                stats: Dict[int, Any] = {}
+                for i in traced:
+                    node = plan.nodes[i]
+                    ins = [vals[j] for j in node.inputs]
+                    if i in cut_set:
+                        # structure-stable cache injection: the cond picks
+                        # between the cached table and computing in place,
+                        # so the executable is identical whatever hits
+                        def _compute(node=node, ins=ins):
+                            out = _executor._eval_node(
+                                node, ins, env, n_patients, engine,
+                                predicate_engine=peng)
+                            if node.op in STATS_OPS:
+                                return out
+                            return (out, None)
+
+                        def _cached(i=i):
+                            st = struct[i][1]
+                            return (cut_tabs[i],
+                                    None if st is None
+                                    else _zeros_like_struct(st))
+
+                        out, st = jax.lax.cond(flags[i], _cached, _compute)
+                        if st is not None:
+                            stats[i] = st
+                    else:
+                        out = _executor._eval_node(
+                            node, ins, env, n_patients, engine,
+                            predicate_engine=peng)
+                        if node.op in STATS_OPS:
+                            out, stats[i] = out
+                    vals[i] = out
+                return ({i: vals[i] for i in keep},
+                        {i: vals[i] for i in cut_ids},
+                        stats)
+
+        prog = _Program(fn=jax.jit(body), cut_ids=cut_ids,
+                        zeros={i: _zeros_like_struct(struct[i][0])
+                               for i in cut_ids})
+        self._programs[skey] = prog
+        self.stats.compile_count += 1
+        ticket.compiled = True
+        self.log.record(op="service:compile", inputs={}, outputs={},
+                        params={"plan_nodes": len(plan.nodes),
+                                "cut_points": len(cut_ids),
+                                "executables": self.stats.compile_count})
+        return prog
+
+    # -- subgraph cache ------------------------------------------------------
+    def _insert(self, h: str, value: Any,
+                stats: Optional[Dict[str, int]]) -> None:
+        nbytes = _table_nbytes(value)
+        if nbytes > self.config.cache_budget_bytes:
+            return                      # larger than the whole budget: skip
+        self._cache[h] = _CacheEntry(value=value, stats=stats, nbytes=nbytes)
+        self._cache_bytes += nbytes
+        while self._cache_bytes > self.config.cache_budget_bytes:
+            _, old = self._cache.popitem(last=False)   # LRU eviction
+            self._cache_bytes -= old.nbytes
+            self.stats.cache_evictions += 1
+            self.log.record(op="service:evict", inputs={}, outputs={},
+                            params={"freed_bytes": old.nbytes,
+                                    "cache_bytes": self._cache_bytes})
+        self.stats.cache_entries = len(self._cache)
+        self.stats.cache_bytes = self._cache_bytes

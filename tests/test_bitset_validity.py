@@ -389,3 +389,38 @@ def test_subjects_mask_memoized():
                subjects=pack(jnp.ones((n,), bool)), n_patients=n)
     m1 = c.subjects_mask()
     assert c.subjects_mask() is m1
+
+
+# ---------------------------------------------------------------------------
+# sort/dedupe stay word-wise (satellite of the cohort-service PR): sorting
+# gathers bits straight from the packed words and re-emits first_n words;
+# dedupe's row validity is an iota compare on the sorted table
+# ---------------------------------------------------------------------------
+def test_sort_and_dedupe_never_unpack(monkeypatch):
+    from repro.core.extraction import dedupe_by
+
+    rng = np.random.RandomState(5)
+    t = _mk(rng.randint(0, 7, 97), valid=rng.rand(97) < 0.7,
+            extra={"k": rng.randint(0, 5, 97).astype(np.int32)})
+    ctr = _UnpackCounter(monkeypatch)
+    s = t.sort_by(["k", "a"])
+    d = dedupe_by(t, ["k", "a"])
+    jax.block_until_ready((s.valid, d.valid))
+    assert ctr.calls == 0, (
+        f"sort/dedupe expanded packed validity {ctr.calls} time(s)")
+    # layout: packed words out; the sort's valid rows are exactly the first
+    # `count` (dedupe keeps a masked table — run heads — by design)
+    assert s.valid.dtype == jnp.uint32 and d.valid.dtype == jnp.uint32
+    assert np.array_equal(np.asarray(s.valid),
+                          np.asarray(bitset.first_n(s.count, s.capacity)))
+    # semantics vs a plain numpy reference
+    mask = unpack_np(np.asarray(t.valid), t.capacity)
+    ks, as_ = np.asarray(t.columns["k"])[mask], np.asarray(t.columns["a"])[mask]
+    order = np.lexsort((as_, ks))
+    assert np.array_equal(np.asarray(s.columns["k"])[:int(s.count)], ks[order])
+    assert np.array_equal(np.asarray(s.columns["a"])[:int(s.count)], as_[order])
+    dmask = unpack_np(np.asarray(d.valid), d.capacity)
+    got = set(zip(np.asarray(d.columns["k"])[dmask].tolist(),
+                  np.asarray(d.columns["a"])[dmask].tolist()))
+    assert got == set(zip(ks.tolist(), as_.tolist()))
+    assert int(d.count) == len(got)

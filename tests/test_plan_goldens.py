@@ -20,7 +20,7 @@ import pytest
 
 from repro.core import DCIR_SCHEMA, PMSI_MCO_SCHEMA, diagnoses, \
     drug_dispenses, hospital_stays, medical_acts_dcir, medical_acts_pmsi
-from repro.study import Study, col
+from repro.study import Study, col, cut_points, normalize
 from repro.study.expr import render_param
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
@@ -54,8 +54,25 @@ def plan_snapshot(plan) -> dict:
     return {"nodes": nodes, "outputs": dict(plan.outputs)}
 
 
-def _check(name: str, plan) -> None:
-    snap = plan_snapshot(plan)
+def normal_snapshot(plan) -> dict:
+    """Structural view of the *canonical* (service-shared) form of a plan:
+    the alpha-renamed node graph with hoisted-literal slots rendered as
+    ``?N``/``?setN`` placeholders, the extracted literal/vector params, and
+    the subgraph-cache cut points.  Pins what the cohort-query service keys
+    executables and cache entries on — normalization drift (a slot
+    reordering, a lost hoist, a shifted cut) surfaces as a golden diff."""
+    nplan = normalize(plan)
+    snap = plan_snapshot(nplan.plan)
+    snap["lits"] = [float(v) if isinstance(v, float) else v
+                    for v in nplan.lits]
+    snap["vecs"] = [list(v) for v in nplan.vecs]
+    snap["cut_points"] = [[i, nplan.plan.nodes[i].op]
+                          for i in cut_points(nplan.plan)]
+    return snap
+
+
+def _check(name: str, plan, snapshot=plan_snapshot) -> None:
+    snap = snapshot(plan)
     path = os.path.join(GOLDEN_DIR, name)
     if os.environ.get("REGEN_GOLDENS"):
         os.makedirs(GOLDEN_DIR, exist_ok=True)
@@ -136,6 +153,40 @@ def test_quickstart_plan_golden_jnp_engine():
 def test_cohort_study_plan_golden():
     _check("cohort_study_plan.json",
            _cohort_study().optimized_plan(predicate_engine="pallas"))
+
+
+def test_quickstart_normal_golden():
+    _check("quickstart_normal.json",
+           _quickstart_study().optimized_plan(predicate_engine="jnp"),
+           snapshot=normal_snapshot)
+
+
+def test_cohort_study_normal_golden():
+    _check("cohort_study_normal.json",
+           _cohort_study().optimized_plan(predicate_engine="jnp"),
+           snapshot=normal_snapshot)
+
+
+def test_normal_snapshot_hoists_and_renames():
+    """The canonical form must be literal-free and label-free: every literal
+    lives in the params vectors (rendered as ?N slots), tenant-chosen names
+    are alpha-renamed, and two literal-variants share one snapshot."""
+    mk = lambda codes: (Study(n_patients=1_000)
+                        .flatten(DCIR_SCHEMA)
+                        .extract(medical_acts_dcir(codes=codes), name="acts"))
+    a = normal_snapshot(mk(list(range(30))).optimized_plan(
+        predicate_engine="jnp"))
+    b = normal_snapshot(mk(list(range(100, 130))).optimized_plan(
+        predicate_engine="jnp"))
+    assert a["vecs"] == [list(range(30))]
+    # same-length code lists share one structure (the vector is a traced
+    # argument; its *length* is shape, hence structural)
+    a.pop("vecs"), b.pop("vecs")
+    assert a == b
+    rendered = json.dumps(a)
+    assert "?set0" in rendered          # hoisted isin slot, not inline codes
+    assert "acts" not in rendered       # label stripped
+    assert a["cut_points"], "canonical plan should expose cache cut points"
 
 
 def test_snapshot_captures_engines_and_pruning():

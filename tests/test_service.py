@@ -1,0 +1,224 @@
+"""Multi-tenant cohort-query service: plan normalization, shared-executable
+compilation, the cross-tenant subgraph cache, admission policy — and the
+acceptance bar: every served query is bit-identical to a solo ``Study.run``.
+
+Deterministic (no hypothesis): fixed synthetic DCIR, fixed study shapes.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import DCIR_SCHEMA, drug_dispenses, medical_acts_dcir
+from repro.data.synthetic import SyntheticConfig, generate_dcir
+from repro.serving.batching import SlotScheduler
+from repro.study import (
+    CohortQueryService, ServiceConfig, Study, clear_jit_cache, col,
+    device_params, jit_cache_info, normalize,
+)
+from repro.study import executor as _executor
+
+CFG = SyntheticConfig(n_patients=300, seed=13)
+CODES_A = list(range(100, 140))
+CODES_B = list(range(60, 100))
+
+
+@pytest.fixture(scope="module")
+def dcir():
+    return generate_dcir(CFG)
+
+
+def _study(threshold, codes):
+    """The shared study shape: flatten -> whitelist extract -> threshold
+    filter -> cohort algebra.  ``threshold``/``codes`` are the literals
+    normalization hoists out of the compiled program."""
+    s = Study(n_patients=CFG.n_patients)
+    s.flatten(DCIR_SCHEMA)
+    s.extract(drug_dispenses(codes=codes), name="drugs")
+    s.extract(medical_acts_dcir(), name="acts")
+    s.filter("acts", col("value") >= threshold, name="acts_hi")
+    s.cohort("base", "drugs")
+    s.cohort("final", "base & acts_hi")
+    return s
+
+
+def _other_shape(codes):
+    s = Study(n_patients=CFG.n_patients)
+    s.flatten(DCIR_SCHEMA)
+    s.extract(drug_dispenses(codes=codes), name="drugs")
+    s.cohort("exposed", "drugs")
+    return s
+
+
+def _assert_same_result(a, b):
+    assert set(a.events) == set(b.events)
+    for k in a.events:
+        ta, tb = a.events[k], b.events[k]
+        assert int(ta.count) == int(tb.count), k
+        assert np.array_equal(np.asarray(ta.valid), np.asarray(tb.valid)), k
+        for c in ta.columns:
+            assert np.array_equal(np.asarray(ta.columns[c]),
+                                  np.asarray(tb.columns[c])), (k, c)
+    assert set(a.cohorts) == set(b.cohorts)
+    for k in a.cohorts:
+        assert np.array_equal(np.asarray(a.cohorts[k].subjects),
+                              np.asarray(b.cohorts[k].subjects)), k
+    assert a.flatten_stats == b.flatten_stats
+
+
+# ---------------------------------------------------------------------------
+# normalization: equal structure, different literals -> one canonical plan
+# ---------------------------------------------------------------------------
+def test_normalize_equal_structure_shares_plan(dcir):
+    pa = _study(100, CODES_A).optimized_plan(tables=dict(dcir))
+    pb = _study(500, CODES_B).optimized_plan(tables=dict(dcir))
+    na, nb = normalize(pa), normalize(pb)
+    assert na.plan.key() == nb.plan.key()
+    assert na.lits != nb.lits or na.vecs != nb.vecs
+    # labels are alpha-renamed: tenant-chosen names never leak into the key
+    assert all(not n.get("name") for n in na.plan.nodes)
+    # a different shape does NOT collide
+    nc = normalize(_other_shape(CODES_A).optimized_plan(tables=dict(dcir)))
+    assert nc.plan.key() != na.plan.key()
+
+
+def test_normalized_execution_parity_and_shared_compile(dcir):
+    """Satellite regression: two equal-structure/different-literal plans
+    compile ONE executor executable, and both runs stay bit-identical to
+    their baked-literal executions."""
+    env = dict(dcir)
+    studies = [_study(100, CODES_A), _study(500, CODES_B)]
+    solos = [s.run(env) for s in studies]
+
+    clear_jit_cache()
+    for s, solo in zip(studies, solos):
+        plan = s.optimized_plan(tables=env)
+        nplan = normalize(plan)
+        vals = _executor.execute(nplan.plan, env,
+                                 n_patients=CFG.n_patients,
+                                 expr_params=device_params(nplan))
+        canon_of = nplan.orig_to_canon()
+        for name, oi in plan.output_ids.items():
+            if name not in solo.events:
+                continue
+            got, want = vals[canon_of[oi]], solo.events[name]
+            assert int(got.count) == int(want.count), name
+            assert np.array_equal(np.asarray(got.valid),
+                                  np.asarray(want.valid)), name
+            for c in want.columns:
+                assert np.array_equal(np.asarray(got.columns[c]),
+                                      np.asarray(want.columns[c])), (name, c)
+    info = jit_cache_info()
+    assert info["compiles"] == 1, info    # literals are traced args
+    assert info["hits"] == 1, info
+
+
+# ---------------------------------------------------------------------------
+# the service: parity, executable sharing, subgraph cache
+# ---------------------------------------------------------------------------
+def test_service_multi_tenant_parity(dcir):
+    env = dict(dcir)
+    svc = CohortQueryService(env, config=ServiceConfig())
+    jobs = [("alice", _study(100, CODES_A)), ("bob", _study(500, CODES_B)),
+            ("carol", _study(250, CODES_A)), ("alice", _other_shape(CODES_B))]
+    tickets = [svc.submit(s, tenant=t) for t, s in jobs]
+    svc.drain()
+    for (tenant, study), ticket in zip(jobs, tickets):
+        assert ticket.status == "done", ticket.error
+        _assert_same_result(study.run(env), ticket.result)
+    # 2 shapes -> 2 executables for 4 queries; shared prefixes hit
+    assert svc.stats.compile_count == 2
+    assert svc.stats.cache_hits > 0
+    assert svc.stats.hit_rate() >= 0.5
+    ops = [e["op"] for e in svc.log.entries]
+    assert ops.count("service:compile") == 2
+    assert sum(op.startswith("service:query:") for op in ops) == 4
+
+
+def test_service_repeat_query_hits_everywhere(dcir):
+    svc = CohortQueryService(dict(dcir))
+    t1 = svc.submit(_study(100, CODES_A), tenant="a")
+    svc.drain()
+    t2 = svc.submit(_study(100, CODES_A), tenant="b")  # other tenant, same q
+    svc.drain()
+    assert t1.cache_misses > 0 and t1.cache_hits == 0
+    assert t2.cache_misses == 0 and t2.cache_hits == t1.cache_misses
+    assert not t2.compiled
+    _assert_same_result(t1.result, t2.result)
+
+
+def test_service_cache_eviction_under_budget(dcir):
+    env = dict(dcir)
+    # budget sized to hold only part of one query's cut set: inserts evict
+    # older entries LRU-first, correctness must not depend on the cache
+    svc = CohortQueryService(env, config=ServiceConfig(
+        cache_budget_bytes=200_000))
+    r1 = svc.query(_study(100, CODES_A), tenant="a")
+    r2 = svc.query(_study(500, CODES_B), tenant="b")
+    assert svc.stats.cache_evictions > 0
+    assert svc.stats.cache_bytes <= 200_000
+    assert svc.stats.cache_entries == len(svc._cache)
+    _assert_same_result(_study(100, CODES_A).run(env), r1)
+    _assert_same_result(_study(500, CODES_B).run(env), r2)
+
+
+def test_service_table_version_invalidation(dcir):
+    env_v2 = generate_dcir(SyntheticConfig(n_patients=CFG.n_patients, seed=99))
+    svc = CohortQueryService(dict(dcir))
+    svc.query(_study(100, CODES_A), tenant="a")
+    assert svc.stats.cache_entries > 0
+    svc.update_tables(env_v2)
+    assert svc.stats.table_version == 1
+    assert svc.stats.cache_entries == 0 and svc.stats.cache_bytes == 0
+    # the same query against v2 tables must reflect v2 content, not v1 cache
+    r = svc.query(_study(100, CODES_A), tenant="a")
+    _assert_same_result(_study(100, CODES_A).run(dict(env_v2)), r)
+
+
+# ---------------------------------------------------------------------------
+# admission: priority order, per-tenant quotas, bounded queue
+# ---------------------------------------------------------------------------
+def test_slot_scheduler_priority_then_fifo():
+    sched = SlotScheduler(2)
+    sched.submit("low1", key="a", priority=0)
+    sched.submit("hi", key="b", priority=5)
+    sched.submit("low2", key="a", priority=0)
+    assert [x for x, _ in sched.admit()] == ["hi", "low1"]
+    sched.release("b")
+    assert [x for x, _ in sched.admit()] == ["low2"]
+
+
+def test_slot_scheduler_per_key_quota_keeps_fifo_within_key():
+    sched = SlotScheduler(4, per_key_quota=1)
+    for i in range(3):
+        sched.submit(f"a{i}", key="a")
+    sched.submit("b0", key="b")
+    assert [x for x, _ in sched.admit()] == ["a0", "b0"]  # a1/a2 over quota
+    assert sched.queued() == 2
+    sched.release("a")
+    assert [x for x, _ in sched.admit()] == ["a1"]        # FIFO within key
+    sched.release("a")
+    assert [x for x, _ in sched.admit()] == ["a2"]
+
+
+def test_slot_scheduler_bounded_queue():
+    sched = SlotScheduler(1, max_queue=2)
+    assert sched.submit("x") and sched.submit("y")
+    assert not sched.submit("z")
+    assert sched.queued() == 2
+
+
+def test_service_queue_rejection_and_stats(dcir):
+    svc = CohortQueryService(dict(dcir), config=ServiceConfig(max_queue=1))
+    s = _study(100, CODES_A)
+    t1 = svc.submit(s, tenant="a")
+    t2 = svc.submit(s, tenant="b")
+    assert t1.status == "queued" and t2.status == "rejected"
+    svc.drain()
+    assert t1.status == "done" and t2.result is None
+    assert svc.stats.tenant("b").rejected == 1
+    assert svc.stats.tenant("a").completed == 1
+    # queue drained: admission opens up again
+    t3 = svc.submit(s, tenant="c")
+    svc.drain()
+    assert t3.status == "done"
