@@ -224,6 +224,42 @@ def bench_serving(n_patients: int = 2_000, n_queries: int = 32) -> None:
                 f"{r['naive_total_s']}s)")
 
 
+def bench_analyze() -> None:
+    """Static-analysis gate: the golden example plans must be free of
+    error/warn diagnostics under both predicate engines, and every seeded
+    defect fixture must trip exactly its registered code — the same
+    contract ``tools/plan_lint.py`` enforces, wired into the smoke run so
+    a broken analyzer (or a newly-dirty golden plan) fails CI twice."""
+    import time
+
+    from repro.study.analyze import DIAGNOSTIC_CODES, analyze, \
+        format_diagnostics
+    from repro.study.defects import all_defects, golden_studies
+
+    for name, study in golden_studies().items():
+        for engine in ("pallas", "jnp"):
+            plan = study.optimized_plan(predicate_engine=engine)
+            t0 = time.perf_counter()
+            diags = analyze(plan, n_patients=study.n_patients)
+            us = (time.perf_counter() - t0) * 1e6
+            bad = [d for d in diags if d.severity in ("error", "warn")]
+            _emit(f"analyze.{name}.{engine}", us,
+                  f"nodes={len(plan.nodes)} diags={len(diags)} "
+                  f"error_warn={len(bad)}")
+            if bad:
+                raise SystemExit(
+                    f"analyze.{name}.{engine}: golden plan carries "
+                    f"error/warn diagnostics:\n{format_diagnostics(bad)}")
+    missed = [code for code, plan, kwargs in all_defects()
+              if not any(d.code == code for d in analyze(plan, **kwargs))]
+    _emit("analyze.defects", 0.0,
+          f"fired={len(DIAGNOSTIC_CODES) - len(missed)}"
+          f"/{len(DIAGNOSTIC_CODES)}")
+    if missed:
+        raise SystemExit(
+            f"analyze.defects: seeded defects not detected: {missed}")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -268,6 +304,7 @@ def main() -> None:
         bench_bitset(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
         bench_serving(n_patients=500)
+        bench_analyze()
         return
     bench_table1()
     bench_flattening()
@@ -278,6 +315,7 @@ def main() -> None:
     bench_fig3()
     bench_study()
     bench_serving()
+    bench_analyze()
     bench_roofline()
 
 

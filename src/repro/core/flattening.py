@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitset as _bs
 from repro.core.columnar import ColumnarTable, NULL_FLOAT, NULL_INT, is_null
 from repro.core.schema import JoinEdge, StarSchema
 
@@ -108,8 +109,14 @@ def lookup_join(
     rows) and null-key left rows miss by construction; both are counted in
     ``FlatteningStats.null_keys``.
     """
-    l_valid = left.valid_bool()
-    r_key_null = is_null(right.columns[right_key]) & right.valid_bool()
+    # word-wise validity: every row-mask consumer below gathers its bit
+    # straight from the packed words (``bit_at`` fuses into the consumer) —
+    # the searchsorted key fills never round-trip validity through a bool
+    # column (pinned by the no-unpack tests)
+    l_valid = _bs.bit_at(left.valid, jnp.arange(left.capacity, dtype=jnp.int32))
+    r_rows = jnp.arange(right.capacity, dtype=jnp.int32)
+    r_key_null = is_null(right.columns[right_key]) \
+        & _bs.bit_at(right.valid, r_rows)
     right = right.filter(~is_null(right.columns[right_key]))
     r = right.sort_by([right_key])
     cap_r = r.capacity
@@ -121,12 +128,12 @@ def lookup_join(
         found = jnp.zeros(left.capacity, bool)
         r = r.pad_to(1)  # 1-row dummy so gathers below are well-formed
     else:
-        r_valid = r.valid_bool()
-        rk = jnp.where(r_valid, r.columns[right_key],
+        rk = jnp.where(_bs.bit_at(r.valid, jnp.arange(cap_r, dtype=jnp.int32)),
+                       r.columns[right_key],
                        _maxval(r.columns[right_key].dtype))
         pos = jnp.searchsorted(rk, lk, side="left")
         posc = jnp.clip(pos, 0, cap_r - 1)
-        found = ((pos < cap_r) & (rk[posc] == lk) & r_valid[posc]
+        found = ((pos < cap_r) & (rk[posc] == lk) & _bs.bit_at(r.valid, posc)
                  & l_valid & ~is_null(lk))
 
     new_cols = dict(left.columns)
@@ -177,14 +184,18 @@ def expand_join(
     flags capacity overruns (the audit the paper computes per stage).
     """
     L = left.capacity
-    l_valid = left.valid_bool()
-    r_key_null = is_null(right.columns[right_key]) & right.valid_bool()
+    # word-wise validity, as in lookup_join: bits gathered from the packed
+    # words at each use site, never expanded to a bool column
+    l_valid = _bs.bit_at(left.valid, jnp.arange(L, dtype=jnp.int32))
+    r_key_null = is_null(right.columns[right_key]) \
+        & _bs.bit_at(right.valid, jnp.arange(right.capacity, dtype=jnp.int32))
     right = right.filter(~is_null(right.columns[right_key]))
     if right.capacity == 0:
         right = right.pad_to(1)
     r = right.sort_by([right_key])
     cap_r = r.capacity
-    rk = jnp.where(r.valid_bool(), r.columns[right_key], _maxval(r.columns[right_key].dtype))
+    rk = jnp.where(_bs.bit_at(r.valid, jnp.arange(cap_r, dtype=jnp.int32)),
+                   r.columns[right_key], _maxval(r.columns[right_key].dtype))
     lk = left.columns[left_key]
     l_key_null = is_null(lk) & l_valid
 

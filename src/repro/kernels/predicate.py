@@ -46,8 +46,8 @@ from repro.kernels import default_interpret
 
 __all__ = [
     "DEFAULT_BLOCK", "MAX_ISIN_VALUES", "PREDICATE_ENGINES", "compilable",
-    "compile_predicate", "default_interpret", "predicate_bitset",
-    "resolve_engine",
+    "compile_predicate", "default_interpret", "isin_vmem_bytes",
+    "predicate_bitset", "resolve_engine",
 ]
 
 DEFAULT_BLOCK = 1024           # rows per grid block; must be a multiple of 32
@@ -107,6 +107,16 @@ def _isin_sizes(p, out: list) -> None:
         return
     for x in p[1:]:
         _isin_sizes(x, out)
+
+
+def isin_vmem_bytes(n_values: int, block: int = DEFAULT_BLOCK) -> int:
+    """VMEM bytes the in-kernel sorted-membership broadcast needs for one
+    ``isin`` whitelist of ``n_values`` entries: the (block x whitelist)
+    comparison intermediate plus the resident table, int32 lanes.  The
+    static analyzer quotes this in its engine-feasibility diagnostics so an
+    oversized whitelist comes with the budget it would blow."""
+    n = max(int(n_values), 1)
+    return 4 * (block * n + n)
 
 
 def compilable(expr_param) -> bool:

@@ -13,6 +13,11 @@ label stripping) so structurally-equal queries share one executable;
 ``CohortQueryService`` (service) serves many tenants' studies against one
 resident star schema with plan-normalized jit sharing and a cross-tenant
 subgraph result cache.
+
+``analyze`` statically verifies plans before execution — abstract
+interpretation over the IR computing schema/capacity/kind facts and
+predicate semantics, reported as stable-coded ``Diagnostic``s; surfaced via
+``Study.check()``, service admission, and the ``tools/plan_lint.py`` gate.
 """
 from repro.study.plan import Node, Plan, PlanBuilder
 from repro.study.expr import (
@@ -36,6 +41,9 @@ from repro.study.normalize import (
 from repro.study.service import (
     CohortQueryService, ServiceConfig, ServiceStats, TenantStats, QueryTicket,
 )
+from repro.study.analyze import (
+    Diagnostic, DIAGNOSTIC_CODES, PlanValidationError, analyze,
+)
 
 __all__ = [
     "Node", "Plan", "PlanBuilder",
@@ -51,4 +59,5 @@ __all__ = [
     "cut_points", "subgraph_hashes",
     "CohortQueryService", "ServiceConfig", "ServiceStats", "TenantStats",
     "QueryTicket",
+    "Diagnostic", "DIAGNOSTIC_CODES", "PlanValidationError", "analyze",
 ]

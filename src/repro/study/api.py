@@ -390,6 +390,36 @@ class Study:
         self._opt_cache = (key, opt)
         return opt
 
+    def check(self, tables: Optional[Dict[str, ColumnarTable]] = None,
+              n_shards: int = 1, predicate_engine: str = "auto",
+              engine: str = "xla", optimize: bool = True) -> List:
+        """Statically verify the study's plan without executing it.
+
+        Runs the abstract-interpretation analyzer (``study/analyze.py``)
+        over the optimized plan (or the raw plan with ``optimize=False``)
+        and returns the list of ``Diagnostic`` findings — schema errors,
+        provably-empty predicates, misaligned capacities, engine-feasibility
+        notes — each with a stable ``SPnnn`` code and a fix hint.  Bound
+        sources (``Study.source``) and the ``tables`` argument ground scans
+        in real schemas/dtypes, which is what enables the content-dependent
+        checks; without them the structural checks still run.
+
+        A clean bill of health is ``[]``; error-level findings are exactly
+        what ``CohortQueryService`` rejects at admission time.
+        """
+        # member import, not `from repro.study import analyze`: the package
+        # re-exports the analyze() function, shadowing the submodule
+        from repro.study.analyze import analyze as _analyze_plan
+
+        env = dict(self._sources)
+        env.update(tables or {})
+        plan = (self.optimized_plan(tables=env or None, n_shards=n_shards,
+                                    predicate_engine=predicate_engine,
+                                    engine=engine)
+                if optimize else self.plan())
+        return _analyze_plan(plan, tables=env or None, n_shards=n_shards,
+                             n_patients=self.n_patients)
+
     # -- execution -----------------------------------------------------------
     def run(self, tables: Optional[Dict[str, ColumnarTable]] = None,
             engine: str = "xla", optimize: bool = True, jit: bool = True,

@@ -1,0 +1,229 @@
+"""Seeded-defect plan fixtures: one deliberately-broken plan per analyzer
+diagnostic code.
+
+Shared by the test suite (``tests/test_analyze.py`` asserts the exact code
+fires on each fixture) and the ``tools/plan_lint.py`` CI gate (which fails
+if the shipped analyzer stops detecting any defect class).  Each builder
+returns ``(plan, analyze_kwargs)`` — some defects only manifest against a
+bound table environment (unknown sources, dtype mismatches, misaligned
+capacities), so the kwargs carry the tables/shard context the analyzer
+needs.
+
+Also hosts ``golden_studies()`` — the example-pipeline mirrors the plan
+goldens pin — so the lint CLI and the smoke ``analyze`` gate exercise the
+same plans as ``tests/test_plan_goldens.py`` without importing test code.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.columnar import ColumnarTable
+from repro.kernels.predicate import MAX_ISIN_VALUES
+from repro.study import optimizer as _opt
+from repro.study.expr import _NULL_SENTINEL_INT, col, lit
+from repro.study.plan import Plan, PlanBuilder
+
+__all__ = ["DEFECTS", "build_defect", "all_defects", "golden_studies"]
+
+
+def _table(n: int = 64, dtype=jnp.int32, cols=("x",)) -> ColumnarTable:
+    return ColumnarTable.from_columns(
+        {c: jnp.arange(n, dtype=dtype) for c in cols})
+
+
+def _scan(b: PlanBuilder, cols=("x",)) -> int:
+    return b.scan_star("EV", star="synthetic", columns=tuple(cols))
+
+
+def _out(b: PlanBuilder, nid: int, name: str = "out") -> Plan:
+    b.set_output(name, b.compact(nid))
+    return b.build()
+
+
+def _sp001() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = b.scan("MISSING_SOURCE")
+    return _out(b, t), {"tables": {"EV": _table()}}
+
+
+def _sp002() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b, cols=("a", "b"))
+    t = b.select(t, ("a",))                      # drops b ...
+    t = b.predicate(t, col("b") > 0)             # ... then reads it
+    return _out(b, t), {}
+
+
+def _sp003() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b)
+    t = b.predicate(t, (col("x") < 3) & (col("x") > 5))
+    return _out(b, t), {}
+
+
+def _sp004() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b)
+    t = b.predicate(t, (col("x") >= 0) & (lit(2) < 3))
+    return _out(b, t), {}
+
+
+def _sp005() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b)
+    t = b.predicate(t, col("x").isin([_NULL_SENTINEL_INT, 5]))
+    return _out(b, t), {}
+
+
+def _sp006() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    left = b.scan("L")
+    right = b.scan("R")
+    t = b.lookup_join(left, right, left_key="pid", right_key="pid",
+                      prefix="r_")
+    tables = {"L": _table(cols=("pid", "v")),
+              "R": _table(dtype=jnp.float32, cols=("pid", "w"))}
+    return _out(b, t), {"tables": tables}
+
+
+def _sp007() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    left = _scan(b, cols=("pid", "v"))
+    right = b.scan_star("DIM", columns=("pid", "w"))
+    t = b.expand_join(left, right, left_key="pid", right_key="pid",
+                      capacity=100, prefix="d_")     # 100 % 64 != 0
+    return _out(b, t), {"n_shards": 2}
+
+
+def _sp008() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b)
+    t = b.predicate(t, col("x").isin(range(MAX_ISIN_VALUES + 1)))
+    return _out(b, t), {}
+
+
+def _sp009() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b)
+    t = b.predicate(t, col("x") > 5)
+    plan = _out(b, t)
+    # stamp the pallas engine the way the optimizer does; the literal 5
+    # stays inline, which is exactly what normalize() will hoist + demote
+    return _opt.assign_engines(plan, predicate_engine="pallas"), {}
+
+
+def _sp010() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    a = b.scan("A")
+    c = b.scan("B")
+    t = b.concat((a, c))
+    tables = {"A": _table(n=50), "B": _table(n=50)}  # 50 % 32 != 0
+    return _out(b, t), {"tables": tables}
+
+
+def _sp011() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    left = _scan(b, cols=("pid", "v"))
+    right = b.scan_star("DIM", columns=("pid", "w"))
+    t = b.expand_join(left, right, left_key="pid", right_key="pid",
+                      capacity=None, prefix="d_")
+    return _out(b, t), {}
+
+
+def _sp012() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    a = _scan(b)
+    c = _scan(b, cols=("y",))
+    t = b.cohort_op("&", a, c, name="bad")           # tables are not cohorts
+    b.set_output("bad", t)
+    return b.build(), {}
+
+
+def _sp013() -> Tuple[Plan, Dict[str, Any]]:
+    b = PlanBuilder()
+    t = _scan(b)
+    t = b.add("frobnicate", (t,))
+    return _out(b, t), {}
+
+
+def _sp014() -> Tuple[Plan, Dict[str, Any]]:
+    plan, kwargs = _sp003()                          # contradictory mask ...
+    return plan, kwargs                              # ... named output rides it
+
+
+DEFECTS: Mapping[str, Callable[[], Tuple[Plan, Dict[str, Any]]]] = {
+    "SP001": _sp001, "SP002": _sp002, "SP003": _sp003, "SP004": _sp004,
+    "SP005": _sp005, "SP006": _sp006, "SP007": _sp007, "SP008": _sp008,
+    "SP009": _sp009, "SP010": _sp010, "SP011": _sp011, "SP012": _sp012,
+    "SP013": _sp013, "SP014": _sp014,
+}
+
+
+def build_defect(code: str) -> Tuple[Plan, Dict[str, Any]]:
+    """The seeded-defect plan (and analyzer kwargs) for one diagnostic
+    code."""
+    return DEFECTS[code]()
+
+
+def all_defects():
+    """Yield ``(code, plan, analyze_kwargs)`` for every seeded defect."""
+    for code, mk in DEFECTS.items():
+        plan, kwargs = mk()
+        yield code, plan, kwargs
+
+
+# ---------------------------------------------------------------------------
+# golden example studies (mirrors of examples/quickstart.py and
+# examples/cohort_study.py, same shapes the plan goldens pin)
+# ---------------------------------------------------------------------------
+def golden_studies() -> Dict[str, Any]:
+    from repro.core import DCIR_SCHEMA, diagnoses, drug_dispenses, \
+        hospital_stays, medical_acts_dcir, medical_acts_pmsi
+    from repro.study.api import Study
+
+    quickstart = (Study(n_patients=1_000)
+                  .flatten(DCIR_SCHEMA)
+                  .extract(drug_dispenses(), name="drug_purchases")
+                  .extract(medical_acts_dcir(codes=list(range(30))),
+                           name="acts")
+                  .patients("IR_BEN")
+                  .cohort("base", "extract_patients")
+                  .cohort("drugged", "drug_purchases")
+                  .cohort("final", "drugged & base - acts")
+                  .flow("base", "drugged", "final"))
+
+    study_end = 14_600 + 3 * 365
+    cohort_study = (Study(n_patients=2_000, window=(14_600, study_end))
+                    .patients("IR_BEN")
+                    .extract(drug_dispenses(), name="drug_purchases")
+                    .extract(drug_dispenses()
+                             .filtered(col("cip13").isin(range(65))
+                                       & col("execution_date")
+                                       .between(14_600, study_end)),
+                             name="prevalent_drugs")
+                    .extract(medical_acts_dcir(), name="acts")
+                    .extract(medical_acts_pmsi(), name="hospital_acts")
+                    .extract(diagnoses(), name="diagnoses")
+                    .extract(hospital_stays(), name="stays")
+                    .transform("exposures", "drug_purchases",
+                               name="exposures", purview_days=60)
+                    .concat("all_acts", "acts", "hospital_acts")
+                    .transform("fractures", "all_acts", "diagnoses",
+                               name="fractures",
+                               fracture_act_codes=list(range(30)),
+                               fracture_diag_codes=list(range(40)))
+                    .transform("follow_up", "extract_patients",
+                               "drug_purchases", name="follow_up",
+                               study_end=study_end)
+                    .cohort("base", "extract_patients")
+                    .cohort("exposed", "exposures")
+                    .cohort("fractured", "fractures")
+                    .cohort("final", "(exposed & base) - fractured")
+                    .flow("base", "exposed", "final")
+                    .featurize("X", cohort="final", kind="dense",
+                               n_buckets=36, bucket_days=31, n_features=128)
+                    .featurize("tokens", cohort="final", kind="tokens",
+                               seq_len=256))
+    return {"quickstart": quickstart, "cohort_study": cohort_study}

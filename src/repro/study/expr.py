@@ -44,9 +44,14 @@ import numpy as np
 
 from repro.core.columnar import ColumnarTable, is_null
 
+# host-side mirror of the int32 NULL sentinel (columnar.NULL_INT is a jnp
+# scalar; const folding stays device-free)
+_NULL_SENTINEL_INT = -2_147_483_648 + 1
+
 __all__ = [
     "Expr", "Col", "Lit", "col", "lit", "all_of", "any_of",
     "expr_from_param", "fused_predicate", "node_predicate",
+    "param_conjuncts", "const_fold_param",
     "HoistedLit", "HoistedIsIn", "bound_params",
     "CohortRef", "CohortCombine", "parse_cohort_expr",
 ]
@@ -575,6 +580,83 @@ def node_predicate(node) -> Optional[Expr]:
 def render_param(p: Tuple) -> str:
     """Compact human-readable form for OperationLog entries."""
     return repr(expr_from_param(p))
+
+
+def param_conjuncts(p: Tuple) -> Tuple[Tuple, ...]:
+    """Split a serialized Expr into its top-level AND conjuncts.
+
+    The static analyzer reasons conjunct-by-conjunct (interval intersection,
+    constant folding): ``(a < 3) & (a > 5) & b.not_null()`` yields three
+    parts.  Non-conjunction roots come back as a single-element tuple."""
+    if isinstance(p, tuple) and p and p[0] == "bool" and p[1] == "and":
+        return param_conjuncts(p[2]) + param_conjuncts(p[3])
+    return (p,)
+
+
+def const_fold_param(p: Tuple):
+    """Evaluate a serialized Expr that touches no columns or hoisted slots.
+
+    Returns the folded Python value, or ``None`` when the result depends on
+    runtime data (column refs, hoisted slots, unsupported folds).  Boolean
+    connectives only fold over boolean operands — predicate algebra on raw
+    ints is left to the runtime's bitwise semantics.  ``isin`` over an empty
+    whitelist folds to ``False`` regardless of its operand: no value is ever
+    a member of the empty set (the analyzer's always-false check rides on
+    this)."""
+    tag = p[0]
+    if tag == "lit":
+        return p[1]
+    if tag == "cmp":
+        l, r = const_fold_param(p[2]), const_fold_param(p[3])
+        if l is None or r is None:
+            return None
+        try:
+            return bool(_CMP_FNS[p[1]](l, r))
+        except TypeError:
+            return None
+    if tag == "arith":
+        l, r = const_fold_param(p[2]), const_fold_param(p[3])
+        if l is None or r is None:
+            return None
+        try:
+            return _ARITH_FNS[p[1]](l, r)
+        except (TypeError, ZeroDivisionError):
+            return None
+    if tag == "bool":
+        l, r = const_fold_param(p[2]), const_fold_param(p[3])
+        l = l if isinstance(l, bool) else None
+        r = r if isinstance(r, bool) else None
+        if p[1] == "and":
+            if l is False or r is False:
+                return False
+            if l is True and r is True:
+                return True
+        else:
+            if l is True or r is True:
+                return True
+            if l is False and r is False:
+                return False
+        return None
+    if tag == "not":
+        x = const_fold_param(p[1])
+        return (not x) if isinstance(x, bool) else None
+    if tag == "isin":
+        if len(p[2]) == 0:
+            return False
+        x = const_fold_param(p[1])
+        if x is None:
+            return None
+        try:
+            return any(x == v for v in p[2])
+        except TypeError:
+            return None
+    if tag in ("isnull", "notnull"):
+        x = const_fold_param(p[1])
+        if x is None:
+            return None
+        null = (isinstance(x, float) and x != x) or x == _NULL_SENTINEL_INT
+        return null if tag == "isnull" else not null
+    return None  # col, hlit, hisin: runtime-dependent
 
 
 # ---------------------------------------------------------------------------

@@ -165,6 +165,11 @@ class NormalPlan:
     vecs: Tuple[Tuple, ...]
     node_map: Tuple[Tuple[int, int], ...]
     out_map: Tuple[Tuple[str, str], ...]
+    # canonical node ids whose predicate engine normalization demoted
+    # pallas -> jnp (hoisted literals; the kernel specializes on values).
+    # The service audits these into the OperationLog + per-tenant
+    # ServiceStats, and the analyzer's SP009 diagnostic predicts them.
+    demoted: Tuple[int, ...] = ()
 
     def orig_to_canon(self) -> Dict[int, int]:
         return dict(self.node_map)
@@ -196,6 +201,7 @@ def normalize(plan: Plan) -> NormalPlan:
     lits: List = []
     vecs: List[Tuple] = []
     new_id: Dict[int, int] = {}
+    demoted: set = set()
 
     def emit(i: int) -> int:
         if i in new_id:
@@ -209,15 +215,19 @@ def normalize(plan: Plan) -> NormalPlan:
             elif k in _EXPRS_KEYS and v is not None:
                 v = tuple(_hoist_expr(e, lits, vecs) for e in v)
             params[k] = v
-        if (node.op in PREDICATE_OPS and params.get("engine") == "pallas"
-                and any(_has_hoisted(v) for k, v in params.items()
-                        if k in _EXPR_KEYS + _EXPRS_KEYS and v is not None)):
+        demote = (node.op in PREDICATE_OPS
+                  and params.get("engine") == "pallas"
+                  and any(_has_hoisted(v) for k, v in params.items()
+                          if k in _EXPR_KEYS + _EXPRS_KEYS and v is not None))
+        if demote:
             # the Pallas codegen specializes on literal values; hoisted
             # predicates run the value-generic jnp engine instead
             params["engine"] = "jnp"
             params.pop("bitset_block", None)
             params.pop("bitset_word", None)
         nid = b.add(node.op, ins, **params)
+        if demote:
+            demoted.add(nid)
         new_id[i] = nid
         return nid
 
@@ -231,7 +241,8 @@ def normalize(plan: Plan) -> NormalPlan:
         out_map.append((name, canon_name))
     return NormalPlan(plan=b.build(), lits=tuple(lits), vecs=tuple(vecs),
                       node_map=tuple(sorted(new_id.items())),
-                      out_map=tuple(sorted(out_map)))
+                      out_map=tuple(sorted(out_map)),
+                      demoted=tuple(sorted(demoted)))
 
 
 # ---------------------------------------------------------------------------

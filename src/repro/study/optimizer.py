@@ -52,7 +52,7 @@ from repro.study.plan import (JOIN_OPS, MASK_OPS, PREDICATE_OPS, Node, Plan,
 __all__ = ["optimize", "merge_projections", "fuse_masks", "defer_compaction",
            "prune_columns", "eliminate_joins", "plan_capacities",
            "prune_exchanges", "dce", "assign_engines", "available_columns",
-           "required_columns", "OPTIMIZER_VERSION"]
+           "required_columns", "join_right_cols", "OPTIMIZER_VERSION"]
 
 # Bumped whenever a pass changes what an optimized plan *means* for a given
 # builder-level study.  Cross-run caches keyed on optimized-plan content
@@ -287,12 +287,18 @@ _COLS_PRESERVING = frozenset({
 })
 
 
-def _join_right_cols(node: Node, right_avail: FrozenSet[str]) -> Dict[str, str]:
+def join_right_cols(node: Node, right_avail: FrozenSet[str]) -> Dict[str, str]:
     """{output column name: right column name} contributed by a join's right
-    side (the right key folds into the left side and never surfaces)."""
+    side (the right key folds into the left side and never surfaces).
+
+    Shared with ``study/analyze.py``: the static analyzer's schema inference
+    must agree with the pruner's view of join output columns."""
     prefix = node.get("prefix") or ""
     rk = node.get("right_key")
     return {prefix + c: c for c in right_avail if c != rk}
+
+
+_join_right_cols = join_right_cols  # internal alias (pre-analyzer name)
 
 
 def available_columns(plan: Plan) -> Dict[int, Optional[FrozenSet[str]]]:

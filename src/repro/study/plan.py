@@ -48,7 +48,7 @@ import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 __all__ = ["Node", "Plan", "PlanBuilder", "MASK_OPS", "TABLE_OPS", "COHORT_OPS",
-           "JOIN_OPS", "STATS_OPS", "PREDICATE_OPS"]
+           "JOIN_OPS", "STATS_OPS", "PREDICATE_OPS", "HOST_OPS", "OP_KINDS"]
 
 # ops whose value is a ColumnarTable
 TABLE_OPS = frozenset({
@@ -73,6 +73,36 @@ MASK_OPS = frozenset({"predicate", "drop_nulls", "value_filter"})
 PREDICATE_OPS = MASK_OPS | frozenset({"fused_mask"})
 # ops executed host-side, after the jitted portion
 HOST_OPS = frozenset({"featurize", "flow"})
+
+# op signatures: op -> (input kind spec, output kind).  The spec is a tuple of
+# kind tokens matched positionally against the input nodes' output kinds;
+# a trailing "*" means zero-or-more of that kind, a trailing "?" optional.
+# ``study/analyze.py`` kind-checks plans against this table and
+# ``tools/lint_invariants.py`` asserts it stays in sync with the op sets
+# above — registering a new op in one place but not the other is a lint error.
+OP_KINDS: Mapping[str, Tuple[Tuple[str, ...], str]] = {
+    "scan": ((), "table"),
+    "scan_star": ((), "table"),
+    "select": (("table",), "table"),
+    "predicate": (("table",), "table"),
+    "drop_nulls": (("table",), "table"),
+    "value_filter": (("table",), "table"),
+    "fused_mask": (("table",), "table"),
+    "dedupe": (("table",), "table"),
+    "conform_events": (("table",), "table"),
+    "compact": (("table",), "table"),
+    "transform": (("table*",), "table"),
+    "concat": (("table*",), "table"),
+    "lookup_join": (("table", "table"), "table"),
+    "expand_join": (("table", "table"), "table"),
+    "exchange": (("table",), "table"),
+    "slice_time": (("table",), "table"),
+    "key_count": (("table", "table"), "table"),
+    "cohort_from_events": (("table",), "cohort"),
+    "cohort_op": (("cohort", "cohort"), "cohort"),
+    "featurize": (("cohort", "table?"), "host"),
+    "flow": (("cohort*",), "host"),
+}
 
 
 def _freeze(v: Any) -> Any:

@@ -63,6 +63,7 @@ from repro.study.normalize import (
     NormalPlan, cut_points, device_params, normalize, params_signature,
     subgraph_hashes,
 )
+from repro.study.analyze import PlanValidationError, analyze as _analyze_plan
 from repro.study.api import Study, StudyResult
 from repro.study.expr import bound_params
 from repro.study.optimizer import OPTIMIZER_VERSION
@@ -92,6 +93,8 @@ class TenantStats:
     completed: int = 0
     rejected: int = 0
     failed: int = 0
+    invalid: int = 0     # plans rejected by admission-time static analysis
+    demoted: int = 0     # predicate nodes normalization demoted pallas->jnp
 
 
 @dataclasses.dataclass
@@ -108,6 +111,8 @@ class ServiceStats:
     cache_entries: int = 0
     cache_bytes: int = 0
     table_version: int = 0
+    plans_rejected: int = 0           # error-level static analysis findings
+    demotions: int = 0                # pallas->jnp normalization demotions
 
     def tenant(self, name: str) -> TenantStats:
         return self.tenants.setdefault(name, TenantStats())
@@ -129,6 +134,8 @@ class ServiceStats:
             "cache_entries": self.cache_entries,
             "cache_bytes": self.cache_bytes,
             "table_version": self.table_version,
+            "plans_rejected": self.plans_rejected,
+            "demotions": self.demotions,
         }
 
 
@@ -140,7 +147,7 @@ class QueryTicket:
     study: Study
     priority: int = 0
     seq: int = -1
-    status: str = "queued"            # queued | rejected | done | failed
+    status: str = "queued"    # queued | rejected | invalid | done | failed
     result: Optional[StudyResult] = None
     error: Optional[BaseException] = None
     cache_hits: int = 0
@@ -291,6 +298,17 @@ class CohortQueryService:
                 self._run_ticket(ticket)
                 ticket.status = "done"
                 ts.completed += 1
+            except PlanValidationError as e:
+                # static analysis rejected the plan at admission — it never
+                # touched the compile cache; distinct from runtime failures
+                ticket.status = "invalid"
+                ticket.error = e
+                ts.invalid += 1
+                self.stats.plans_rejected += 1
+                self.log.record(
+                    op=f"service:invalid:{tenant}", inputs={}, outputs={},
+                    params={"diagnostics": [str(d) for d in e.diagnostics
+                                            if d.severity == "error"][:8]})
             except Exception as e:  # noqa: BLE001 — isolate tenant failures
                 ticket.status = "failed"
                 ticket.error = e
@@ -327,6 +345,17 @@ class CohortQueryService:
         plan = study.optimized_plan(tables=self._env,
                                     predicate_engine=peng_arg or "auto",
                                     engine=self.config.engine)
+        # admission-time static analysis: error-level plans (unknown
+        # sources, dropped-column reads, provably-empty masks, kind
+        # mismatches) are rejected BEFORE they reach normalization or the
+        # compile cache — a broken tenant plan must not cost a compile slot
+        # or poison shared executables
+        n_shards = (self.mesh.shape[self.axis_name]
+                    if self.mesh is not None else 1)
+        diags = _analyze_plan(plan, tables=self._env, n_shards=n_shards,
+                              n_patients=study.n_patients)
+        if any(d.severity == "error" for d in diags):
+            raise PlanValidationError(diags)
         req_log = OperationLog()
         if self.mesh is not None:
             # sharded passthrough: the mesh plan cache dedupes by structure;
@@ -362,6 +391,19 @@ class CohortQueryService:
         peng = _pk.resolve_engine(self.config.predicate_engine,
                                   self.config.engine)
         nplan = normalize(plan)
+        if nplan.demoted:
+            # satellite of the engine-feasibility analysis (SP009): the
+            # silent pallas->jnp demotion is now auditable — logged per
+            # query and counted per tenant
+            ts = self.stats.tenant(ticket.tenant)
+            ts.demoted += len(nplan.demoted)
+            self.stats.demotions += len(nplan.demoted)
+            self.log.record(
+                op=f"service:demote:{ticket.tenant}", inputs={}, outputs={},
+                params={"nodes": list(nplan.demoted),
+                        "engine": "pallas->jnp",
+                        "reason": "hoisted-literal predicates run the "
+                                  "value-generic jnp engine"})
         lits, vecs = device_params(nplan)
         env = {s: self._env[s] for s in nplan.plan.sources()}
         prog = self._program(ticket, nplan, study.n_patients, peng, env,

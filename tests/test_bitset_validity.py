@@ -424,3 +424,55 @@ def test_sort_and_dedupe_never_unpack(monkeypatch):
                   np.asarray(d.columns["a"])[dmask].tolist()))
     assert got == set(zip(ks.tolist(), as_.tolist()))
     assert int(d.count) == len(got)
+
+
+def test_join_fills_never_unpack(monkeypatch):
+    # joins stay word-wise too (satellite of the static-analysis PR): the
+    # key fills and the found-mask gather read bits via ``bitset.bit_at``,
+    # never expanding validity to a bool column
+    from repro.core.flattening import expand_join, lookup_join
+
+    rng = np.random.RandomState(11)
+    left = ColumnarTable.from_columns({
+        "pid": jnp.asarray(rng.randint(0, 20, 97).astype(np.int32)),
+        "v": jnp.asarray(rng.randint(0, 9, 97).astype(np.int32)),
+    }, valid=jnp.asarray(rng.rand(97) < 0.8))
+    right = ColumnarTable.from_columns({
+        "pid": jnp.asarray(np.arange(20, dtype=np.int32)),
+        "w": jnp.asarray(rng.randint(0, 5, 20).astype(np.int32)),
+    }, valid=jnp.asarray(rng.rand(20) < 0.9))
+    child = ColumnarTable.from_columns({
+        "pid": jnp.asarray(rng.randint(0, 20, 64).astype(np.int32)),
+        "x": jnp.asarray(rng.randint(0, 5, 64).astype(np.int32)),
+    }, valid=jnp.asarray(rng.rand(64) < 0.9))
+    ctr = _UnpackCounter(monkeypatch)
+    j, _ = lookup_join(left, right, "pid", "pid", prefix="r_")
+    e, _ = expand_join(left, child, "pid", "pid", 512, prefix="c_")
+    jax.block_until_ready((j.valid, e.valid))
+    assert ctr.calls == 0, (
+        f"join key fills expanded packed validity {ctr.calls} time(s)")
+    # layout: packed uint32 words out of both join flavours
+    assert j.valid.dtype == jnp.uint32 and e.valid.dtype == jnp.uint32
+    assert j.valid.shape[0] == -(-j.capacity // 32)
+    assert e.valid.shape[0] == -(-e.capacity // 32)
+    # semantics vs a numpy reference: every valid left row survives the
+    # lookup join, and its right attribute is the match or the null sentinel
+    lmask = unpack_np(np.asarray(left.valid), left.capacity)
+    rmask = unpack_np(np.asarray(right.valid), right.capacity)
+    jmask = unpack_np(np.asarray(j.valid), j.capacity)
+    assert np.array_equal(jmask, lmask)
+    rmap = {int(k): int(w) for k, w, ok in zip(
+        np.asarray(right.columns["pid"]), np.asarray(right.columns["w"]),
+        rmask) if ok}
+    for i in np.nonzero(lmask)[0]:
+        k = int(np.asarray(left.columns["pid"])[i])
+        want = rmap.get(k, NULL_INT)
+        assert int(np.asarray(j.columns["r_w"])[i]) == want
+    # expand join: one output row per (valid left, valid child) key pair,
+    # plus one null-filled row per unmatched valid left row
+    cmask = unpack_np(np.asarray(child.valid), child.capacity)
+    ckeys = np.asarray(child.columns["pid"])[cmask]
+    n_pairs = sum(
+        max(int((ckeys == int(np.asarray(left.columns["pid"])[i])).sum()), 1)
+        for i in np.nonzero(lmask)[0])
+    assert int(e.count) == n_pairs

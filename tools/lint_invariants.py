@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Repo invariant linter — AST-level rules the test suite can't see.
+
+Three rule families, each guarding an invariant earlier PRs established:
+
+R1  bitset discipline — ``valid_bool()`` / ``valid_numpy()`` /
+    ``bitset.unpack`` / ``unpack_np`` expand packed validity words to a bool
+    (or numpy) row mask.  That expansion is the exact cost the bitset-native
+    redesign removed from the hot path, so new call sites may appear only in
+    the sanctioned modules below (sinks that genuinely need per-row masks:
+    sorts/segment folds/host export) — anywhere else is a lint error.
+
+R2  kernel determinism — ``src/repro/kernels`` must stay replayable: no
+    wall-clock, RNG, or entropy calls inside kernel modules.  Differential
+    tests (pallas vs jnp vs numpy reference) rely on bit-identical reruns.
+
+R3  op-registry consistency — every plan op must be registered in
+    ``plan.OP_KINDS`` with a kind signature, and the op sets must tile it
+    exactly.  ``study/analyze.py`` kind-checks against OP_KINDS (SP012/13),
+    so an op missing there silently escapes static analysis.
+
+Run:  PYTHONPATH=src python tools/lint_invariants.py
+Exit: 0 clean, 1 violations (printed one per line, file:line).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src" / "repro"
+
+# R1: modules allowed to expand packed validity to a bool/numpy row mask.
+UNPACK_ALLOWLIST = {
+    "core/bitset.py",         # defines unpack/unpack_np
+    "core/columnar.py",       # valid_bool()/valid_numpy() accessors + concat
+    "core/cohort.py",         # subject-bitset -> membership mask export
+    "core/stats.py",          # per-row masks for segment statistics
+    "core/feature_driver.py", # host-side featurization export
+    "core/transformers.py",   # host-side study transformers
+    "core/flattening.py",     # hash_partition's per-row shard routing
+    "study/executor.py",      # jnp fallback engine + host boundary
+    "study/expr.py",          # jnp mask algebra (the value-generic engine)
+    "study/optimizer.py",     # constant-fold over materialized host tables
+}
+UNPACK_NAMES = {"valid_bool", "valid_numpy", "unpack", "unpack_np"}
+
+# R2: forbidden call prefixes inside src/repro/kernels (determinism).
+NONDET_PATTERNS = [
+    re.compile(p) for p in (
+        r"^time\.", r"^datetime\.", r"^random\.", r"^np\.random\.",
+        r"^numpy\.random\.", r"^os\.urandom$", r"^secrets\.",
+    )
+]
+
+
+def _dotted(node: ast.AST) -> str:
+    """Render a call target as a dotted path ('np.random.rand') or ''."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def lint_unpack_discipline() -> list:
+    errs = []
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(SRC).as_posix()
+        if rel in UNPACK_ALLOWLIST:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else "")
+            if name in UNPACK_NAMES:
+                errs.append(
+                    f"{path.relative_to(REPO)}:{node.lineno}: R1 "
+                    f"{name}() expands packed validity outside the "
+                    f"sanctioned modules (see tools/lint_invariants.py)")
+    return errs
+
+
+def lint_kernel_determinism() -> list:
+    errs = []
+    for path in sorted((SRC / "kernels").glob("*.py")):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if any(p.search(dotted) for p in NONDET_PATTERNS):
+                errs.append(
+                    f"{path.relative_to(REPO)}:{node.lineno}: R2 "
+                    f"nondeterministic call {dotted}() in a kernel module "
+                    f"(kernels must replay bit-identically)")
+    return errs
+
+
+def lint_op_registry() -> list:
+    from repro.study import plan as P
+
+    errs = []
+    registered = set(P.OP_KINDS)
+    declared = P.TABLE_OPS | P.COHORT_OPS | P.HOST_OPS
+    for op in sorted(declared - registered):
+        errs.append(f"src/repro/study/plan.py: R3 op {op!r} in an op set "
+                    f"but missing from OP_KINDS")
+    for op in sorted(registered - declared):
+        errs.append(f"src/repro/study/plan.py: R3 op {op!r} in OP_KINDS but "
+                    f"absent from TABLE_OPS|COHORT_OPS|HOST_OPS")
+    if not P.PREDICATE_OPS <= P.TABLE_OPS:
+        errs.append("src/repro/study/plan.py: R3 PREDICATE_OPS must be a "
+                    "subset of TABLE_OPS")
+    if not P.JOIN_OPS <= P.TABLE_OPS:
+        errs.append("src/repro/study/plan.py: R3 JOIN_OPS must be a subset "
+                    "of TABLE_OPS")
+    # every op the PlanBuilder sugar emits must be registered
+    plan_src = (SRC / "study" / "plan.py").read_text()
+    tree = ast.parse(plan_src, filename="plan.py")
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add" and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            op = node.args[0].value
+            if op not in registered:
+                errs.append(f"src/repro/study/plan.py:{node.lineno}: R3 "
+                            f"builder emits op {op!r} not in OP_KINDS")
+    return errs
+
+
+def main() -> int:
+    errs = (lint_unpack_discipline() + lint_kernel_determinism()
+            + lint_op_registry())
+    for e in errs:
+        print(e)
+    n_files = len(list(SRC.rglob("*.py")))
+    if errs:
+        print(f"\nlint_invariants: {len(errs)} violation(s) across "
+              f"{n_files} source files")
+        return 1
+    print(f"lint_invariants: OK ({n_files} source files, 3 rule families)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""plan-lint — CI gate running the static plan verifier over the goldens.
+
+Two halves, both must pass:
+
+1. **Golden plans are diagnostic-clean.**  The two example studies
+   (quickstart, cohort_study — the same shapes ``tests/goldens`` pins) are
+   optimized under both predicate engines and fed to ``analyze()``.  Any
+   ``error`` or ``warn`` diagnostic fails the gate; ``info`` notes (SP009
+   demotion, SP010 unaligned concat) are reported but allowed — they flag
+   performance texture, not defects.
+
+2. **Seeded defects all fire.**  Every fixture in ``study/defects.py``
+   (one per SPnnn code) must produce exactly its expected diagnostic —
+   proving the analyzer still detects each defect class end to end.
+
+Run:  PYTHONPATH=src python tools/plan_lint.py
+Exit: 0 clean, 1 violations.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.study.analyze import DIAGNOSTIC_CODES, analyze, format_diagnostics
+from repro.study.defects import all_defects, golden_studies
+
+
+def lint_goldens() -> int:
+    failures = 0
+    for name, study in golden_studies().items():
+        for engine in ("pallas", "jnp"):
+            plan = study.optimized_plan(predicate_engine=engine)
+            diags = analyze(plan, n_patients=study.n_patients)
+            bad = [d for d in diags if d.severity in ("error", "warn")]
+            info = [d for d in diags if d.severity == "info"]
+            status = "FAIL" if bad else "ok"
+            print(f"  {status:4s} {name:14s} engine={engine:6s} "
+                  f"{len(plan.nodes):3d} nodes  "
+                  f"{len(bad)} error/warn, {len(info)} info")
+            if bad:
+                print(format_diagnostics(bad))
+                failures += 1
+            for d in info:
+                print(f"         note: {d.code} @ node {d.node}: {d.message}")
+    return failures
+
+
+def lint_defects() -> int:
+    failures = 0
+    for code, plan, kwargs in all_defects():
+        diags = analyze(plan, **kwargs)
+        hit = [d for d in diags if d.code == code]
+        sev, summary = DIAGNOSTIC_CODES[code]
+        if hit:
+            print(f"  ok   {code} ({sev:5s}) fires: {summary}")
+        else:
+            print(f"  FAIL {code} ({sev:5s}) did NOT fire: {summary}")
+            print("       got: " + (format_diagnostics(diags) or "(clean)"))
+            failures += 1
+    return failures
+
+
+def main() -> int:
+    print("golden plans (must be free of error/warn diagnostics):")
+    f1 = lint_goldens()
+    print(f"seeded defects (each of the {len(DIAGNOSTIC_CODES)} codes "
+          f"must fire on its fixture):")
+    f2 = lint_defects()
+    if f1 or f2:
+        print(f"\nplan-lint: FAILED ({f1} dirty golden plan(s), "
+              f"{f2} silent defect(s))")
+        return 1
+    print("plan-lint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
