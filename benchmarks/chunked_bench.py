@@ -1,0 +1,149 @@
+"""Out-of-core chunked execution vs the resident path: prefetch overlap +
+bit-identity under a partitioned star.
+
+Workload: one flatten/extract/cohort/featurize Study, run three ways over
+the same synthetic DCIR star —
+
+* **resident** — the ordinary ``Study.run`` over device-resident tables
+  (the reference result);
+* **serial**   — ``ChunkedExecutor(prefetch=False)``: load chunk i, run
+  chunk i, load chunk i+1 ... (the load-then-execute baseline);
+* **pipelined** — ``ChunkedExecutor(prefetch=True)``: a one-worker thread
+  loads + stages chunk i+1 while the jitted program for chunk i runs.
+
+The store is written compressed so the load leg prices what an out-of-core
+run actually pays (disk read + inflate + device staging).  Measured: wall
+clock of both chunked loops (best of ``repeats``), the executor's own
+load/exec split, and compile count across all chunks.  The acceptance bars
+(enforced by ``run.py --smoke``): pipelined wall < the same run's
+``load_s + exec_s`` — the no-overlap accounting; wall can only undercut the
+sum of its own two legs if they genuinely ran concurrently — exactly ONE
+compile for the whole stream, and the merged chunked result bit-identical
+to the resident run: cohort words, event valid-rows and feature tensors.
+The measured ``prefetch=False`` wall is reported alongside
+(``serial_run_s``) but NOT gated: on a CPU smoke host the jitted program
+already saturates every core and the store sits in page cache, so the
+serial/pipelined delta there is scheduler noise, not the disk-latency
+overlap this engine exists to hide.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import DCIR_SCHEMA, drug_dispenses
+from repro.data import partition_star
+from repro.data.synthetic import SyntheticConfig, generate_dcir
+from repro.study import Study, clear_jit_cache
+from repro.study.chunked import ChunkedExecutor
+
+WORD = 32
+
+
+def _build(n_patients: int) -> Study:
+    return (Study(n_patients=n_patients)
+            .flatten(DCIR_SCHEMA)
+            .extract(drug_dispenses(), name="drugs")
+            .patients("IR_BEN")
+            .cohort("base", "extract_patients")
+            .cohort("drugged", "drugs")
+            .cohort("final", "drugged & base")
+            .featurize("X", cohort="final", kind="dense",
+                       n_buckets=12, bucket_days=31, n_features=64))
+
+
+def _same(a, b) -> bool:
+    if set(a.events) != set(b.events) or set(a.cohorts) != set(b.cohorts):
+        return False
+    for k in a.cohorts:
+        if not np.array_equal(np.asarray(a.cohorts[k].subjects),
+                              np.asarray(b.cohorts[k].subjects)):
+            return False
+    for k in a.events:
+        ta, tb = a.events[k], b.events[k]
+        if int(ta.count) != int(tb.count):
+            return False
+        # valid ROWS in order — capacities (padding) differ by design
+        ra, rb = ta.to_numpy(), tb.to_numpy()
+        if set(ra) != set(rb) or any(not np.array_equal(ra[c], rb[c])
+                                     for c in ra):
+            return False
+    la, lb = jax.tree.leaves(a.features), jax.tree.leaves(b.features)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(u), np.asarray(v))
+        for u, v in zip(la, lb))
+
+
+def run(n_patients: int = 2_000, repeats: int = 3, seed: int = 13,
+        target_chunks: int = 12) -> List[Dict]:
+    tables = generate_dcir(SyntheticConfig(n_patients=n_patients, seed=seed))
+    src_cap = tables["ER_PRS"].capacity
+    chunk_capacity = max(WORD,
+                         -(-src_cap // (target_chunks * WORD)) * WORD)
+
+    t0 = time.perf_counter()
+    resident = _build(n_patients).run(dict(tables))
+    resident_s = time.perf_counter() - t0
+
+    tmp = tempfile.mkdtemp(prefix="chunked_bench_")
+    try:
+        store = partition_star(tables, os.path.join(tmp, "store"),
+                               source="ER_PRS",
+                               chunk_capacity=chunk_capacity,
+                               compressed=True)
+
+        # cold run: the one compile the whole stream is allowed
+        clear_jit_cache()
+        cold = ChunkedExecutor(store, prefetch=True)
+        res_cold = cold.run(_build(n_patients))
+        compiles = cold.report.compiles
+        parity = _same(resident, res_cold)
+
+        best: Dict[str, Dict] = {}
+        for prefetch, name in ((False, "serial"), (True, "pipelined")):
+            for _ in range(repeats):
+                ex = ChunkedExecutor(store, prefetch=prefetch)
+                res = ex.run(_build(n_patients))
+                rep = ex.report.to_json()
+                if name not in best or rep["wall_s"] < best[name]["wall_s"]:
+                    best[name] = rep
+            parity = parity and _same(resident, res)
+        pipe, ser = best["pipelined"], best["serial"]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    return [{
+        "name": "stream",
+        "n_patients": n_patients,
+        "n_chunks": store.n_chunks,
+        "chunk_capacity": chunk_capacity,
+        "rows": pipe["rows"],
+        "repeats": repeats,
+        "resident_s": round(resident_s, 4),
+        "compiles": compiles,
+        "load_s": round(pipe["load_s"], 4),
+        "exec_s": round(pipe["exec_s"], 4),
+        "serial_s": round(pipe["serial_s"], 4),       # load+exec, no overlap
+        "serial_run_s": round(ser["wall_s"], 4),      # measured, not gated
+        "pipelined_s": round(pipe["wall_s"], 4),
+        "overlap_saved_s": round(pipe["overlap_saved_s"], 4),
+        "speedup": round(pipe["serial_s"] / pipe["wall_s"], 2)
+        if pipe["wall_s"] else 0.0,
+        "parity": "pass" if parity else "FAIL",
+    }]
+
+
+def main() -> None:
+    import json
+
+    print(json.dumps(run(n_patients=500, repeats=2), indent=2))
+
+
+if __name__ == "__main__":
+    main()

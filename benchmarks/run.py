@@ -224,6 +224,46 @@ def bench_serving(n_patients: int = 2_000, n_queries: int = 32) -> None:
                 f"{r['naive_total_s']}s)")
 
 
+def bench_chunked(n_patients: int = 2_000, repeats: int = 3) -> None:
+    """Out-of-core gate: streaming the partitioned star through the chunked
+    executor must (a) merge to a result bit-identical to the resident run —
+    cohort words, event valid-rows, feature tensors, (b) compile exactly
+    ONE executable for the whole chunk stream, and (c) overlap load with
+    execution: pipelined wall < the same run's load_s + exec_s, the
+    no-overlap accounting (the measured prefetch=False wall is reported
+    but not gated — see ``chunked_bench`` docstring).  Emits
+    ``BENCH_chunked.json``."""
+    import json
+
+    from benchmarks import chunked_bench
+
+    rows = chunked_bench.run(n_patients=n_patients, repeats=repeats)
+    with open("BENCH_chunked.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _emit(
+            f"chunked.{r['name']}",
+            r["pipelined_s"] * 1e6,
+            f"serial_s={r['serial_s']} serial_run_s={r['serial_run_s']} "
+            f"saved={r['overlap_saved_s']}s speedup={r['speedup']}x "
+            f"chunks={r['n_chunks']} compiles={r['compiles']} "
+            f"resident_s={r['resident_s']} parity={r['parity']}",
+        )
+        if r["parity"] != "pass":
+            raise SystemExit(
+                f"chunked.{r['name']}: chunked/resident parity FAILED — "
+                "the merged chunk stream diverged from the resident run")
+        if r["compiles"] != 1:
+            raise SystemExit(
+                f"chunked.{r['name']}: expected ONE compile across "
+                f"{r['n_chunks']} chunks, saw {r['compiles']}")
+        if r["pipelined_s"] >= r["serial_s"]:
+            raise SystemExit(
+                f"chunked.{r['name']}: prefetch overlap did not beat serial "
+                f"load-then-execute accounting ({r['pipelined_s']}s wall >= "
+                f"{r['serial_s']}s load+exec — the legs never overlapped)")
+
+
 def bench_analyze() -> None:
     """Static-analysis gate: the golden example plans must be free of
     error/warn diagnostics under both predicate engines, and every seeded
@@ -304,6 +344,7 @@ def main() -> None:
         bench_bitset(n_patients=500, repeats=2)
         bench_study(n_patients=500, repeats=2)
         bench_serving(n_patients=500)
+        bench_chunked(n_patients=500, repeats=2)
         bench_analyze()
         return
     bench_table1()
@@ -315,6 +356,7 @@ def main() -> None:
     bench_fig3()
     bench_study()
     bench_serving()
+    bench_chunked()
     bench_analyze()
     bench_roofline()
 

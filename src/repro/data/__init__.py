@@ -2,4 +2,10 @@ from repro.data.synthetic import (
     SyntheticConfig, generate_dcir, generate_pmsi, generate_snds,
     generate_ssr, generate_had, generate_ir_imb,
 )
-from repro.data.io import save_columnar, load_columnar, csv_size_bytes, columnar_size_bytes
+from repro.data.io import (
+    save_columnar, save_columnar_arrays, load_columnar, load_columnar_arrays,
+    save_star, load_star, csv_size_bytes, columnar_size_bytes,
+)
+from repro.data.chunkstore import (
+    ChunkManifest, ChunkMeta, ChunkStore, partition_star,
+)

@@ -4,56 +4,149 @@ The paper's storage story (Table 1): CSV exports are ~11x larger than the
 columnar+compressed Parquet encoding.  Offline we persist ``ColumnarTable``s
 as compressed ``.npz`` (column-major, zlib) and measure the same CSV-vs-
 columnar ratio in ``benchmarks/table1_dataset.py``.
+
+Out-of-core additions (the ``data.chunkstore`` substrate):
+
+* ``compressed=False`` writes plain ``np.savez`` archives whose members are
+  ZIP_STORED — raw ``.npy`` payloads at a fixed byte offset inside the zip.
+* ``mmap_mode`` on the load side memory-maps those stored members in place
+  (``np.memmap`` at the member's data offset), so slicing a 15 TB-class
+  column for chunk partitioning reads only the touched pages instead of
+  materializing the whole column and its slice copies — the host's peak
+  memory stays ~one chunk, not 2x the table.  Deflated members cannot be
+  mapped; they fall back to an eager decompress, loudly documented rather
+  than silently doubling memory.
+* ``load_columnar_arrays`` exposes the raw host arrays (no device transfer)
+  for host-side consumers like the chunk partitioner.
 """
 from __future__ import annotations
 
 import io
 import os
-from typing import Dict
+import zipfile
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.columnar import ColumnarTable
 
-__all__ = ["save_columnar", "load_columnar", "save_star", "load_star",
+__all__ = ["save_columnar", "save_columnar_arrays", "load_columnar",
+           "load_columnar_arrays", "save_star", "load_star",
            "csv_size_bytes", "columnar_size_bytes"]
 
 
-def save_columnar(table: ColumnarTable, path: str) -> int:
-    """Write compressed columnar file; returns bytes on disk.
-
-    ``__valid__`` is stored in the canonical packed uint32 bitset form
-    (1 bit/row); ``load_columnar`` also accepts legacy files that stored a
-    bool row mask."""
-    arrs = {f"col::{k}": np.asarray(v) for k, v in table.columns.items()}
-    arrs["__valid__"] = np.asarray(table.valid)
-    np.savez_compressed(path, **arrs)
+def save_columnar_arrays(cols: Dict[str, np.ndarray], valid: np.ndarray,
+                         path: str, compressed: bool = True) -> int:
+    """Host-array writer behind ``save_columnar`` — the chunk partitioner
+    streams mmap'd slices straight to disk through this, with no device
+    round-trip."""
+    arrs = {f"col::{k}": np.asarray(v) for k, v in cols.items()}
+    arrs["__valid__"] = np.asarray(valid)
+    if compressed:
+        np.savez_compressed(path, **arrs)
+    else:
+        np.savez(path, **arrs)
     p = path if path.endswith(".npz") else path + ".npz"
     return os.path.getsize(p)
 
 
-def load_columnar(path: str) -> ColumnarTable:
-    with np.load(path) as z:
-        cols = {k[5:]: z[k] for k in z.files if k.startswith("col::")}
-        valid = z["__valid__"]
+def save_columnar(table: ColumnarTable, path: str,
+                  compressed: bool = True) -> int:
+    """Write a columnar ``.npz`` file; returns bytes on disk.
+
+    ``__valid__`` is stored in the canonical packed uint32 bitset form
+    (1 bit/row); ``load_columnar`` also accepts legacy files that stored a
+    bool row mask.  ``compressed=False`` stores members raw (ZIP_STORED),
+    which is what makes them memory-mappable on load."""
+    return save_columnar_arrays(table.columns, table.valid, path,
+                                compressed=compressed)
+
+
+def _mapped_member(path: str, info: zipfile.ZipInfo) -> Optional[np.ndarray]:
+    """Memory-map one ZIP_STORED ``.npy`` member of an npz archive, or None
+    when the member is compressed (deflated bytes cannot be mapped)."""
+    if info.compress_type != zipfile.ZIP_STORED:
+        return None
+    with open(path, "rb") as f:
+        # the central directory's header_offset points at the local file
+        # header; its name/extra lengths (which may differ from the central
+        # copy) give the member's data offset
+        f.seek(info.header_offset)
+        hdr = f.read(30)
+        if len(hdr) < 30 or hdr[:4] != b"PK\x03\x04":
+            return None
+        fnlen = int.from_bytes(hdr[26:28], "little")
+        extralen = int.from_bytes(hdr[28:30], "little")
+        data_off = info.header_offset + 30 + fnlen + extralen
+        f.seek(data_off)
+        buf = io.BytesIO(f.read(min(info.file_size, 4096)))
+    version = np.lib.format.read_magic(buf)
+    shape, fortran, dtype = np.lib.format._read_array_header(buf, version)
+    if dtype.hasobject:
+        return None
+    return np.memmap(path, dtype=dtype, mode="r",
+                     offset=data_off + buf.tell(), shape=shape,
+                     order="F" if fortran else "C")
+
+
+def load_columnar_arrays(path: str, mmap_mode: Optional[str] = None
+                         ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Host-side load: ``(columns, valid)`` as numpy arrays, no device hop.
+
+    With ``mmap_mode`` (e.g. ``"r"``), members written by
+    ``save_columnar(compressed=False)`` come back as ``np.memmap`` views —
+    zero bytes materialized until sliced.  Compressed members degrade to an
+    eager read (np.load cannot map deflated payloads)."""
+    p = path if path.endswith(".npz") else path + ".npz"
+    cols: Dict[str, np.ndarray] = {}
+    valid: Optional[np.ndarray] = None
+    mapped: Dict[str, np.ndarray] = {}
+    if mmap_mode is not None:
+        with zipfile.ZipFile(p) as z:
+            for info in z.infolist():
+                arr = _mapped_member(p, info)
+                if arr is not None:
+                    name = info.filename
+                    mapped[name[:-4] if name.endswith(".npy") else name] = arr
+    with np.load(p) as z:
+        for k in z.files:
+            arr = mapped.get(k)
+            if arr is None:
+                arr = z[k]
+            if k.startswith("col::"):
+                cols[k[5:]] = arr
+            elif k == "__valid__":
+                valid = arr
+    return cols, valid
+
+
+def load_columnar(path: str, mmap_mode: Optional[str] = None) -> ColumnarTable:
+    cols, valid = load_columnar_arrays(path, mmap_mode=mmap_mode)
     return ColumnarTable.from_columns(cols, valid=valid)
 
 
-def save_star(tables: Dict[str, ColumnarTable], dirpath: str) -> Dict[str, int]:
+def save_star(tables: Dict[str, ColumnarTable], dirpath: str,
+              compressed: bool = True) -> Dict[str, int]:
     """Persist a star schema (or any named table set) as one ``.npz`` per
     table under ``dirpath``; returns per-table bytes on disk.  The on-disk
-    unit the cohort-query service loads a resident table version from."""
+    unit the cohort-query service loads a resident table version from (and
+    the chunk partitioner streams its central table out of)."""
     os.makedirs(dirpath, exist_ok=True)
-    return {name: save_columnar(t, os.path.join(dirpath, name))
+    return {name: save_columnar(t, os.path.join(dirpath, name),
+                                compressed=compressed)
             for name, t in tables.items()}
 
 
-def load_star(dirpath: str) -> Dict[str, ColumnarTable]:
-    """Load every ``<name>.npz`` under ``dirpath`` as ``{name: table}``."""
+def load_star(dirpath: str, mmap_mode: Optional[str] = None
+              ) -> Dict[str, ColumnarTable]:
+    """Load every ``<name>.npz`` under ``dirpath`` as ``{name: table}``.
+    ``mmap_mode`` passes through to ``load_columnar`` — uncompressed stars
+    map lazily instead of materializing every column eagerly."""
     out: Dict[str, ColumnarTable] = {}
     for fname in sorted(os.listdir(dirpath)):
         if fname.endswith(".npz"):
-            out[fname[:-4]] = load_columnar(os.path.join(dirpath, fname))
+            out[fname[:-4]] = load_columnar(os.path.join(dirpath, fname),
+                                            mmap_mode=mmap_mode)
     return out
 
 

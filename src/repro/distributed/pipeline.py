@@ -128,9 +128,6 @@ def pipeline_transformer(layer_fn: Callable, mesh: Mesh, n_stages: int,
 # ---------------------------------------------------------------------------
 # sharded study-plan execution
 # ---------------------------------------------------------------------------
-_PLAN_CACHE = {}
-
-
 def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
                          axis_name: str = "data", engine: str = "xla",
                          predicate_engine: str | None = None):
@@ -187,16 +184,20 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
         nd.inputs[0] for nd in plan.nodes if nd.op == "cohort_from_events"}))
 
     # key on mesh *content* — an id() key could hand a new mesh allocated at
-    # a freed mesh's address a stale compiled fn bound to dead devices
+    # a freed mesh's address a stale compiled fn bound to dead devices.
+    # Memoized through the executor's shared cache (``cached_executable``),
+    # so sharded executables show up in — and reset with — the same
+    # ``jit_cache_info()`` compile/hit audit as local ones.
     mesh_key = (tuple(mesh.axis_names),
                 tuple(mesh.shape[a] for a in mesh.axis_names),
                 tuple(d.id for d in np.ravel(mesh.devices)))
     from repro.kernels.predicate import resolve_engine
+    from repro.study.executor import cached_executable
 
     peng = resolve_engine(predicate_engine, engine)
     key = (plan.key(), n_patients, engine, peng, mesh_key, axis_name)
-    fn = _PLAN_CACHE.get(key)
-    if fn is None:
+
+    def build():
         def body(cols, valids):
             local = {s: ColumnarTable(c, valids[s],
                                       _bits_count(valids[s]))
@@ -222,13 +223,13 @@ def execute_plan_sharded(plan, tables, n_patients: int, mesh: Mesh,
             s_out = jax.lax.psum(stats, axis_name) if stats else {}
             return t_out, b_out, c_out, s_out
 
-        fn = jax.jit(compat_shard_map(
+        return jax.jit(compat_shard_map(
             body, mesh,
             in_specs=(P(axis_name), P(axis_name)),
             out_specs=(P(axis_name), P(), P(), P()),
         ))
-        _PLAN_CACHE[key] = fn
 
+    fn = cached_executable(key, build)
     t_out, b_out, counts_vec, s_out = fn(cols_in, valid_in)
     from repro.study.executor import _host_stats, traced_ids
 

@@ -44,6 +44,7 @@ from repro.study.service import (
 from repro.study.analyze import (
     Diagnostic, DIAGNOSTIC_CODES, PlanValidationError, analyze,
 )
+from repro.study.chunked import ChunkedExecutor, ChunkedReport
 
 __all__ = [
     "Node", "Plan", "PlanBuilder",
@@ -60,4 +61,5 @@ __all__ = [
     "CohortQueryService", "ServiceConfig", "ServiceStats", "TenantStats",
     "QueryTicket",
     "Diagnostic", "DIAGNOSTIC_CODES", "PlanValidationError", "analyze",
+    "ChunkedExecutor", "ChunkedReport",
 ]

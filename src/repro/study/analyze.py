@@ -49,6 +49,8 @@ mirror this registry):
   SP012 error  op wired to inputs of the wrong kind (table vs cohort)
   SP013 error  op not registered in the plan-IR op tables
   SP014 warn   named output is provably empty
+  SP015 error  chunked-execution capacity misaligned to the validity word
+               quantum (chunk boundaries would split packed words)
 """
 from __future__ import annotations
 
@@ -86,6 +88,8 @@ DIAGNOSTIC_CODES: Mapping[str, Tuple[str, str]] = {
     "SP012": ("error", "op wired to inputs of the wrong kind"),
     "SP013": ("error", "op not registered in the plan-IR op tables"),
     "SP014": ("warn", "named output is provably empty"),
+    "SP015": ("error", "chunk capacity misaligned to the validity word "
+                       "quantum"),
 }
 
 SEVERITIES = ("info", "warn", "error")
@@ -275,8 +279,8 @@ def _kinds_match(spec: Tuple[str, ...], got: List[Optional[str]]) -> bool:
 # the analysis
 # ---------------------------------------------------------------------------
 def analyze(plan: Plan, tables: Optional[Mapping[str, Any]] = None,
-            n_shards: int = 1,
-            n_patients: Optional[int] = None) -> List[Diagnostic]:
+            n_shards: int = 1, n_patients: Optional[int] = None,
+            chunk_capacity: Optional[int] = None) -> List[Diagnostic]:
     """Abstract-interpret ``plan`` and return its diagnostics.
 
     ``tables`` (optional name -> ColumnarTable environment — e.g. the
@@ -285,7 +289,11 @@ def analyze(plan: Plan, tables: Optional[Mapping[str, Any]] = None,
     ``columns`` declarations and the content-dependent checks stay silent.
     ``n_shards`` tightens the capacity-alignment check to the mesh split
     quantum.  ``n_patients`` is accepted for symmetry with execution entry
-    points (cohort capacities) but no current check consumes it."""
+    points (cohort capacities) but no current check consumes it.
+    ``chunk_capacity`` (the out-of-core executor's per-chunk row capacity)
+    enables SP015: chunk boundaries must fall on packed-validity word
+    boundaries — and, sharded, on the 32*n_shards mesh quantum — or the
+    per-chunk word slices are not the bitsets of their rows."""
     diags: List[Diagnostic] = []
     facts: Dict[int, NodeFact] = {}
 
@@ -293,6 +301,9 @@ def analyze(plan: Plan, tables: Optional[Mapping[str, Any]] = None,
              severity: Optional[str] = None) -> None:
         diags.append(Diagnostic(code, severity or DIAGNOSTIC_CODES[code][0],
                                 node, message, hint))
+
+    if chunk_capacity is not None:
+        _check_chunk_capacity(int(chunk_capacity), plan, n_shards, emit)
 
     for i, node in enumerate(plan.nodes):
         spec = OP_KINDS.get(node.op)
@@ -519,6 +530,26 @@ def _transfer(node, i: int, in_facts: List[Optional[NodeFact]], tables,
 
     # host ops (featurize, flow) and anything kind-checked above
     return NodeFact(kind="host")
+
+
+def _check_chunk_capacity(cap: int, plan: Plan, n_shards: int, emit) -> None:
+    """SP015: a chunked manifest whose per-chunk capacity is off the packed
+    validity word (or, sharded, the 32*n_shards mesh quantum) cannot slice
+    the source bitset on chunk boundaries — reject before any chunk IO.
+    Anchored at the plan's scan nodes (the boundary the chunks feed)."""
+    quantum = WORD * max(int(n_shards), 1)
+    anchor = next((i for i, n in enumerate(plan.nodes)
+                   if n.op in ("scan", "scan_star")), 0)
+    if cap <= 0:
+        emit("SP015", anchor, f"chunk capacity {cap} is not positive",
+             hint="partition with a positive multiple of 32 rows per chunk")
+    elif cap % quantum:
+        what = (f"the sharded validity quantum {quantum} (32*{n_shards} "
+                "shards)" if n_shards > 1 else "the 32-bit validity word")
+        emit("SP015", anchor, f"chunk capacity {cap} is not a multiple of "
+             f"{what}, so chunk boundaries split validity words",
+             hint="re-partition the store with a 32-aligned (sharded: "
+                  "32*n_shards-aligned) chunk_capacity")
 
 
 def _check_alignment(cap: int, i: int, what: str, n_shards: int,

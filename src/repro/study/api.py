@@ -465,6 +465,36 @@ class Study:
             d.setdefault("stage", plan.nodes[i].label())
         return self._finish_result(plan, vals, join_stats, log)
 
+    def run_chunked(self, store, tables: Optional[Dict[str, ColumnarTable]] = None,
+                    engine: str = "xla", predicate_engine: Optional[str] = None,
+                    checkpoint_dir: Optional[str] = None, prefetch: bool = True,
+                    log: Optional[OperationLog] = None,
+                    report_sink: Optional[Dict[str, Any]] = None,
+                    **executor_kwargs: Any) -> StudyResult:
+        """Execute this study out-of-core over a partitioned star
+        (``data.chunkstore.ChunkStore``): the central table streams through
+        the device chunk by chunk — ONE executor compile for all chunks —
+        with chunk i+1's host load + device staging overlapping chunk i's
+        execution, and results merged bit-identical to ``run()`` over the
+        unpartitioned star.  ``checkpoint_dir`` enables the per-chunk
+        journal: a killed run re-invoked with the same arguments resumes,
+        executing only the chunks the journal does not record.  ``tables``
+        supplies extra resident sources (the store's own ``resident/``
+        dimension tables bind automatically).  ``report_sink`` (a dict)
+        receives the run's timing/resume audit (``ChunkedReport`` fields).
+        See ``study/chunked.py`` for merge semantics and the chunk-unsafe
+        op guard."""
+        from repro.study.chunked import ChunkedExecutor
+
+        ex = ChunkedExecutor(store, engine=engine,
+                             predicate_engine=predicate_engine,
+                             checkpoint_dir=checkpoint_dir,
+                             prefetch=prefetch, **executor_kwargs)
+        result = ex.run(self, tables=tables, log=log)
+        if report_sink is not None:
+            report_sink.update(ex.report.to_json())
+        return result
+
     def _finish_result(self, plan: Plan, vals: Dict[int, Any],
                        join_stats: Dict[int, Dict[str, int]],
                        log: OperationLog) -> StudyResult:

@@ -153,11 +153,18 @@ def _sp014() -> Tuple[Plan, Dict[str, Any]]:
     return plan, kwargs                              # ... named output rides it
 
 
+def _sp015() -> Tuple[Plan, Dict[str, Any]]:
+    # a fine plan over a manifest whose chunk capacity splits validity words
+    b = PlanBuilder()
+    t = _scan(b)
+    return _out(b, t), {"chunk_capacity": 100}       # 100 % 32 != 0
+
+
 DEFECTS: Mapping[str, Callable[[], Tuple[Plan, Dict[str, Any]]]] = {
     "SP001": _sp001, "SP002": _sp002, "SP003": _sp003, "SP004": _sp004,
     "SP005": _sp005, "SP006": _sp006, "SP007": _sp007, "SP008": _sp008,
     "SP009": _sp009, "SP010": _sp010, "SP011": _sp011, "SP012": _sp012,
-    "SP013": _sp013, "SP014": _sp014,
+    "SP013": _sp013, "SP014": _sp014, "SP015": _sp015,
 }
 
 

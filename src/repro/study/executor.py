@@ -36,7 +36,8 @@ from repro.study import expr as _expr
 from repro.study.plan import (COHORT_OPS, PREDICATE_OPS, Plan, STATS_OPS,
                               TABLE_OPS)
 
-__all__ = ["execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache"]
+__all__ = ["execute", "TRANSFORMS", "jit_cache_info", "clear_jit_cache",
+           "cached_executable"]
 
 
 # Registered transformer free functions usable from ``transform`` nodes.
@@ -70,6 +71,22 @@ def clear_jit_cache() -> None:
     _JIT_CACHE.clear()
     _JIT_STATS["compiles"] = 0
     _JIT_STATS["hits"] = 0
+
+
+def cached_executable(key: Tuple, build: Callable[[], Callable]) -> Callable:
+    """THE process-wide compiled-executable cache: the local jitted runner,
+    the sharded ``execute_plan_sharded`` path and the chunked executor all
+    memoize through here, so ``jit_cache_info()`` audits every executable in
+    the process (and the serving layer's compile budget covers all three
+    physical strategies).  ``build`` runs once per distinct ``key``; later
+    lookups count as hits."""
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        _JIT_STATS["compiles"] += 1
+        fn = _JIT_CACHE[key] = build()
+    else:
+        _JIT_STATS["hits"] += 1
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -330,9 +347,8 @@ def _jitted_runner(plan: Plan, n_patients: int, engine: str,
                    params_sig: Optional[Tuple] = None) -> Callable:
     peng = _pk.resolve_engine(predicate_engine, engine)
     key = (plan.key(), n_patients, engine, peng, params_sig)
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
-        _JIT_STATS["compiles"] += 1
+
+    def build():
         keep = keep_ids(plan)
 
         def run(env, lits=(), vecs=()):
@@ -355,11 +371,9 @@ def _jitted_runner(plan: Plan, n_patients: int, engine: str,
             def body(env, lits, vecs):
                 return run(env, lits, vecs)
 
-        fn = jax.jit(body)
-        _JIT_CACHE[key] = fn
-    else:
-        _JIT_STATS["hits"] += 1
-    return fn
+        return jax.jit(body)
+
+    return cached_executable(key, build)
 
 
 def _host_stats(stats) -> Dict[int, Dict[str, int]]:

@@ -44,6 +44,7 @@ UNPACK_ALLOWLIST = {
     "study/executor.py",      # jnp fallback engine + host boundary
     "study/expr.py",          # jnp mask algebra (the value-generic engine)
     "study/optimizer.py",     # constant-fold over materialized host tables
+    "data/chunkstore.py",     # partition-time row counts + key ranges (host)
 }
 UNPACK_NAMES = {"valid_bool", "valid_numpy", "unpack", "unpack_np"}
 
