@@ -1,5 +1,6 @@
 """Cohort-query service vs sequential solo runs: compile sharing + subgraph
-cache under a mixed multi-tenant workload.
+cache + the async submit/realize pipeline under a mixed multi-tenant
+workload.
 
 Workload: ``n_queries`` studies from ``n_tenants`` tenants round-robined
 over three plan *shapes*; every query carries tenant/query-specific literals
@@ -10,9 +11,22 @@ compiles once per *shape*, and serves the shared flatten/whitelist prefixes
 from the cross-tenant subgraph cache.
 
 Measured: cold-compile counts (service executables vs naive jit entries),
-subgraph-cache hit rate, per-query latency p50/p95 and total wall for both
-paths — and the acceptance bar: every service result bit-identical to its
-solo run.
+subgraph-cache hit rate, per-query latency p50/p95, total wall for the
+naive path and BOTH service modes.  The sync-vs-pipelined comparison is
+made on *warm* serve walls — each service first pays its per-shape
+compiles on untimed warmup queries, then the timed 32-query serve is the
+steady-state regime where host realization overlaps the next query's
+device submission.  The *gated* pipeline invariant is the run's own
+no-overlap accounting — pipelined serve wall < that serve's
+submit_s + realize_s, i.e. ``serve_overlap_s > 0`` — same idiom as the
+chunked-execution bench: the measured synchronous wall is reported (and
+usually loses) but not gated, because on a core-saturated CPU smoke host
+overlapped work still contends for the same cores and the wall race is
+noise.  Also measured: the sharded path's compile count
+(one per normalized shape, same as local), and the normalization demotion
+count for the golden pallas-stamped plans (must be 0: hoisted literals are
+kernel operands now).  The acceptance bar everywhere: every served query
+bit-identical to its solo run.
 """
 from __future__ import annotations
 
@@ -25,7 +39,7 @@ from repro.core import DCIR_SCHEMA, drug_dispenses, medical_acts_dcir
 from repro.data.synthetic import SyntheticConfig, generate_dcir
 from repro.study import (
     CohortQueryService, ServiceConfig, Study, clear_jit_cache, col,
-    jit_cache_info,
+    jit_cache_info, normalize,
 )
 
 
@@ -79,8 +93,20 @@ def _same(a, b) -> bool:
                for k in a.cohorts)
 
 
+def _golden_demotions() -> int:
+    """Normalization demotions across the golden pallas-stamped plans —
+    with hoisted literals as kernel operands this must be 0."""
+    from repro.study.defects import golden_studies
+
+    total = 0
+    for study in golden_studies().values():
+        nplan = normalize(study.optimized_plan(predicate_engine="pallas"))
+        total += len(nplan.demoted)
+    return total
+
+
 def run(n_patients: int = 2_000, n_queries: int = 32, n_tenants: int = 4,
-        seed: int = 11) -> List[Dict]:
+        seed: int = 11, sharded_queries: int = 8) -> List[Dict]:
     tables = generate_dcir(SyntheticConfig(n_patients=n_patients, seed=seed))
     tenants = [f"tenant{i}" for i in range(n_tenants)]
 
@@ -102,17 +128,55 @@ def run(n_patients: int = 2_000, n_queries: int = 32, n_tenants: int = 4,
     naive_total = time.perf_counter() - t0
     naive_compiles = jit_cache_info()["compiles"]
 
-    # -- service: one resident table set, mixed-tenant queue ------------------
-    svc = CohortQueryService(tables, config=ServiceConfig(n_slots=8))
-    t0 = time.perf_counter()
-    tickets = [svc.submit(mk(q), tenant=tenants[q % n_tenants])
-               for q in range(n_queries)]
-    svc.drain()
-    service_total = time.perf_counter() - t0
-    service_lat = [t.latency_s for t in tickets]
-
-    parity = all(t.status == "done" and _same(solo, t.result)
+    def serve(pipeline: bool):
+        """Warm a fresh service (one untimed query per shape pays the
+        per-shape compile), then time the full workload — the steady-state
+        serving regime, where the sync-vs-pipelined comparison is not
+        drowned by cold-compile jitter.  Returns the timed-phase stage
+        accounting too (submit/realize/overlap deltas across the serve)."""
+        svc = CohortQueryService(
+            tables, config=ServiceConfig(n_slots=8, pipeline=pipeline))
+        t0 = time.perf_counter()
+        for i in range(len(_SHAPES)):          # distinct warmup literals
+            svc.submit(mk(n_queries + i), tenant="warmup")
+        svc.drain()
+        warm_s = time.perf_counter() - t0
+        sub0, rea0 = svc.stats.submit_s, svc.stats.realize_s
+        t0 = time.perf_counter()
+        tickets = [svc.submit(mk(q), tenant=tenants[q % n_tenants])
+                   for q in range(n_queries)]
+        svc.drain()
+        serve_s = time.perf_counter() - t0
+        stages = {"submit_s": svc.stats.submit_s - sub0,
+                  "realize_s": svc.stats.realize_s - rea0}
+        stages["overlap_s"] = max(
+            0.0, stages["submit_s"] + stages["realize_s"] - serve_s)
+        ok = all(t.status == "done" and _same(solo, t.result)
                  for solo, t in zip(solo_results, tickets))
+        return svc, tickets, warm_s, serve_s, stages, ok
+
+    # -- service, synchronous reference: realize inline per admission ---------
+    svc_sync, _, sync_warm, sync_serve, _, sync_parity = serve(pipeline=False)
+
+    # -- service, pipelined: realize on the worker, overlap next submit -------
+    svc, tickets, warm, serve_s, stages, parity = serve(pipeline=True)
+    sync_total = sync_warm + sync_serve
+    service_total = warm + serve_s
+    service_lat = [t.latency_s for t in tickets]
+    snap = svc.stats.snapshot()
+
+    # -- sharded service: same normalization sharing + cache under shard_map --
+    import jax
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    svc_sh = CohortQueryService(tables, mesh=mesh,
+                                config=ServiceConfig(n_slots=8))
+    sh_tickets = [svc_sh.submit(mk(q), tenant=tenants[q % n_tenants])
+                  for q in range(min(sharded_queries, n_queries))]
+    svc_sh.drain()
+    sharded_parity = all(t.status == "done" and _same(solo, t.result)
+                         for solo, t in zip(solo_results, sh_tickets))
 
     def pct(xs, p):
         return float(np.percentile(np.asarray(xs), p))
@@ -129,13 +193,30 @@ def run(n_patients: int = 2_000, n_queries: int = 32, n_tenants: int = 4,
         "cache_misses": svc.stats.cache_misses,
         "hit_rate": round(svc.stats.hit_rate(), 4),
         "naive_total_s": round(naive_total, 4),
+        "service_sync_total_s": round(sync_total, 4),
         "service_total_s": round(service_total, 4),
+        "service_sync_serve_s": round(sync_serve, 4),
+        "service_serve_s": round(serve_s, 4),
         "speedup": round(naive_total / service_total, 2),
+        "pipeline_speedup": round(sync_serve / serve_s, 2),
+        "serve_submit_s": round(stages["submit_s"], 4),
+        "serve_realize_s": round(stages["realize_s"], 4),
+        "serve_overlap_s": round(stages["overlap_s"], 4),
+        "submit_s": snap["submit_s"],
+        "realize_s": snap["realize_s"],
+        "overlap_s": snap["overlap_s"],
         "naive_p50_s": round(pct(naive_lat, 50), 4),
         "naive_p95_s": round(pct(naive_lat, 95), 4),
         "service_p50_s": round(pct(service_lat, 50), 4),
         "service_p95_s": round(pct(service_lat, 95), 4),
-        "parity": "pass" if parity else "FAIL",
+        "demotions": svc.stats.demotions + svc_sync.stats.demotions
+                     + svc_sh.stats.demotions,
+        "golden_demotions": _golden_demotions(),
+        "sharded_queries": len(sh_tickets),
+        "sharded_compiles": svc_sh.stats.compile_count,
+        "sharded_cache_hits": svc_sh.stats.cache_hits,
+        "parity": "pass" if parity and sync_parity else "FAIL",
+        "sharded_parity": "pass" if sharded_parity else "FAIL",
     }]
 
 

@@ -223,7 +223,9 @@ def partition_star(tables: Union[str, Mapping[str, ColumnarTable]],
     with open(tmp, "w") as f:
         json.dump(manifest.to_json(), f, indent=1, sort_keys=True)
     os.replace(tmp, os.path.join(dirpath, MANIFEST_NAME))
-    return ChunkStore(dirpath, mmap_mode=mmap_mode)
+    # compressed members can never map — don't ask, or every chunk load
+    # would warn about the degrade we just chose at write time
+    return ChunkStore(dirpath, mmap_mode=None if compressed else mmap_mode)
 
 
 class ChunkStore:

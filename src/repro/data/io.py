@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import io
 import os
+import warnings
 import zipfile
 from typing import Dict, Optional, Tuple
 
@@ -89,14 +90,20 @@ def _mapped_member(path: str, info: zipfile.ZipInfo) -> Optional[np.ndarray]:
                      order="F" if fortran else "C")
 
 
-def load_columnar_arrays(path: str, mmap_mode: Optional[str] = None
+def load_columnar_arrays(path: str, mmap_mode: Optional[str] = None,
+                         mapped_sink: Optional[Dict[str, bool]] = None
                          ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     """Host-side load: ``(columns, valid)`` as numpy arrays, no device hop.
 
     With ``mmap_mode`` (e.g. ``"r"``), members written by
     ``save_columnar(compressed=False)`` come back as ``np.memmap`` views —
     zero bytes materialized until sliced.  Compressed members degrade to an
-    eager read (np.load cannot map deflated payloads)."""
+    eager read (np.load cannot map deflated payloads) — the degradation is
+    *surfaced*, not silent: ``mapped_sink`` (when given) is filled with one
+    ``member name -> mapped?`` flag per array, and the first degraded member
+    of an archive warns (``RuntimeWarning``, once per file) so an
+    out-of-core caller expecting lazy paging learns its peak host memory is
+    about to be the whole table."""
     p = path if path.endswith(".npz") else path + ".npz"
     cols: Dict[str, np.ndarray] = {}
     valid: Optional[np.ndarray] = None
@@ -108,11 +115,23 @@ def load_columnar_arrays(path: str, mmap_mode: Optional[str] = None
                 if arr is not None:
                     name = info.filename
                     mapped[name[:-4] if name.endswith(".npy") else name] = arr
+    warned = False
     with np.load(p) as z:
         for k in z.files:
             arr = mapped.get(k)
+            is_mapped = arr is not None
             if arr is None:
                 arr = z[k]
+                if mmap_mode is not None and not warned:
+                    warnings.warn(
+                        f"{p}: member {k!r} is compressed and cannot be "
+                        "memory-mapped; falling back to an eager read "
+                        "(write with compressed=False for lazy paging)",
+                        RuntimeWarning, stacklevel=2)
+                    warned = True
+            if mapped_sink is not None:
+                mapped_sink[k[5:] if k.startswith("col::") else k] = \
+                    bool(is_mapped if mmap_mode is not None else False)
             if k.startswith("col::"):
                 cols[k[5:]] = arr
             elif k == "__valid__":
@@ -120,8 +139,11 @@ def load_columnar_arrays(path: str, mmap_mode: Optional[str] = None
     return cols, valid
 
 
-def load_columnar(path: str, mmap_mode: Optional[str] = None) -> ColumnarTable:
-    cols, valid = load_columnar_arrays(path, mmap_mode=mmap_mode)
+def load_columnar(path: str, mmap_mode: Optional[str] = None,
+                  mapped_sink: Optional[Dict[str, bool]] = None
+                  ) -> ColumnarTable:
+    cols, valid = load_columnar_arrays(path, mmap_mode=mmap_mode,
+                                       mapped_sink=mapped_sink)
     return ColumnarTable.from_columns(cols, valid=valid)
 
 

@@ -27,6 +27,16 @@ streamed to every block; membership is the two monotone rank reductions
 ``rank(<= x) > rank(< x)`` — broadcast compares + sums, the TPU-native
 formulation (no gather), exactly equivalent to sorted-array binary search.
 
+**Hoisted literals are kernel operands** (the normalized-plan path): a
+``("hlit", slot)`` leaf becomes a ``(1,)`` SMEM scalar parameter and a
+``("hisin", x, slot, n, isfloat)`` whitelist becomes a sorted,
+lane-padded VMEM vector operand staged *inside* the jit (``jnp.sort`` +
+max-duplicate tail, so padding never adds members).  The compiled kernel is
+therefore value-generic: two tenants' queries differing only in literals
+share one executable, and ``normalize()`` no longer demotes hoisted pallas
+predicates to the jnp engine (oversized whitelists and non-boolean roots
+remain the only demotion causes).
+
 Grid blocks are independent (`parallel` semantics); the wrapper pads ragged
 tails with invalid rows, so any capacity works.
 """
@@ -69,7 +79,11 @@ _ARITH = {"+": _op.add, "-": _op.sub, "*": _op.mul,
 
 # param tags whose value is boolean — the kernel packs bits, so the tree ROOT
 # must be one of these (interior arithmetic is unrestricted)
-_BOOL_TAGS = frozenset({"cmp", "bool", "not", "isin", "isnull", "notnull"})
+_BOOL_TAGS = frozenset({"cmp", "bool", "not", "isin", "hisin",
+                        "isnull", "notnull"})
+
+# lane quantum the sorted whitelists are tail-padded to (static AND hoisted)
+_ISIN_PAD = 8
 
 # ---------------------------------------------------------------------------
 # engine selection
@@ -105,6 +119,10 @@ def _isin_sizes(p, out: list) -> None:
         out.append(len(p[2]))
         _isin_sizes(p[1], out)
         return
+    if p[0] == "hisin":
+        out.append(int(p[3]))          # structural size: the hoisted operand
+        _isin_sizes(p[1], out)         # carries exactly n values
+        return
     for x in p[1:]:
         _isin_sizes(x, out)
 
@@ -112,11 +130,15 @@ def _isin_sizes(p, out: list) -> None:
 def isin_vmem_bytes(n_values: int, block: int = DEFAULT_BLOCK) -> int:
     """VMEM bytes the in-kernel sorted-membership broadcast needs for one
     ``isin`` whitelist of ``n_values`` entries: the (block x whitelist)
-    comparison intermediate plus the resident table, int32 lanes.  The
-    static analyzer quotes this in its engine-feasibility diagnostics so an
-    oversized whitelist comes with the budget it would blow."""
+    comparison intermediate plus the resident operand, int32 lanes, with the
+    whitelist tail-padded to the ``_ISIN_PAD`` lane quantum (the padded form
+    is what actually crosses into VMEM — static tables and hoisted operands
+    alike).  The static analyzer quotes this in its engine-feasibility
+    diagnostics so an oversized whitelist comes with the budget it would
+    blow."""
     n = max(int(n_values), 1)
-    return 4 * (block * n + n)
+    n_pad = n + (-n) % _ISIN_PAD
+    return 4 * (block * n_pad + n_pad)
 
 
 def compilable(expr_param) -> bool:
@@ -124,12 +146,16 @@ def compilable(expr_param) -> bool:
 
       * the root must be boolean-valued (packing bits of an arithmetic value
         would be meaningless), and
-      * every ``isin`` whitelist must fit the VMEM membership budget
-        (``MAX_ISIN_VALUES``; larger lists would blow the in-kernel
-        broadcast on a real TPU).
+      * every ``isin``/``hisin`` whitelist must fit the VMEM membership
+        budget (``MAX_ISIN_VALUES``; larger lists would blow the in-kernel
+        broadcast on a real TPU).  Hoisted whitelists count their structural
+        size ``n`` — the operand carries exactly that many values.
 
+    Hoisted slot refs (``hlit``/``hisin``) are kernel *operands* — SMEM
+    scalars and sorted VMEM vectors — so normalized plans compile too.
     Non-compilable exprs stay on the jnp engine (``assign_engines`` stamps
-    them back; the executor double-checks)."""
+    them back; the executor double-checks; ``normalize`` demotes hoisted
+    pallas nodes only when this predicate says no)."""
     if not (isinstance(expr_param, tuple) and len(expr_param) > 0
             and expr_param[0] in _BOOL_TAGS):
         return False
@@ -165,16 +191,23 @@ def _sorted_member(x: jax.Array, tbl: jax.Array) -> jax.Array:
 
 def compile_predicate(expr_param: Tuple):
     """Compile a serialized Expr (``Expr.to_param`` nested tuples) into
-    ``(columns, isin_tables, eval_fn)``.
+    ``(columns, isin_tables, eval_fn, lit_slots, vec_slots)``.
 
     ``columns`` is the ordered tuple of column operands (the kernel's
     projected inputs); ``isin_tables`` holds one sorted (tail-padded with its
     own max, so padding can never match) numpy whitelist per ``isin`` leaf;
-    ``eval_fn(env, tables)`` maps {column: block array} + table blocks to the
-    boolean mask block — pure jnp, traceable inside a Pallas kernel body.
+    ``lit_slots`` is the ordered tuple of ``hlit`` slot ids the expr reads
+    (each becomes an SMEM scalar parameter) and ``vec_slots`` the ordered
+    ``(slot, n, isfloat)`` triples of its ``hisin`` leaves (each a sorted
+    VMEM vector operand).  ``eval_fn(env, tables, lits, vecs)`` maps
+    {column: block array} + table blocks + {slot: scalar} + {slot: sorted
+    operand} to the boolean mask block — pure jnp, traceable inside a Pallas
+    kernel body.
     """
     columns: List[str] = []
     tables: List[np.ndarray] = []
+    lit_slots: List[int] = []
+    vec_slots: List[Tuple[int, int, bool]] = []
 
     def walk(p) -> Callable:
         tag = p[0]
@@ -182,45 +215,66 @@ def compile_predicate(expr_param: Tuple):
             name = p[1]
             if name not in columns:
                 columns.append(name)
-            return lambda env, tbls: env[name]
+            return lambda env, tbls, lits, vecs: env[name]
         if tag == "lit":
             v = p[1]
-            return lambda env, tbls: v
+            return lambda env, tbls, lits, vecs: v
+        if tag == "hlit":
+            slot = int(p[1])
+            if slot not in lit_slots:
+                lit_slots.append(slot)
+            return lambda env, tbls, lits, vecs: lits[slot]
         if tag == "cmp":
             f, l, r = _CMP[p[1]], walk(p[2]), walk(p[3])
-            return lambda env, tbls: f(l(env, tbls), r(env, tbls))
+            return lambda env, tbls, lits, vecs: f(l(env, tbls, lits, vecs),
+                                                   r(env, tbls, lits, vecs))
         if tag == "arith":
             f, l, r = _ARITH[p[1]], walk(p[2]), walk(p[3])
-            return lambda env, tbls: f(l(env, tbls), r(env, tbls))
+            return lambda env, tbls, lits, vecs: f(l(env, tbls, lits, vecs),
+                                                   r(env, tbls, lits, vecs))
         if tag == "bool":
             l, r = walk(p[2]), walk(p[3])
             if p[1] == "and":
-                return lambda env, tbls: l(env, tbls) & r(env, tbls)
-            return lambda env, tbls: l(env, tbls) | r(env, tbls)
+                return lambda env, tbls, lits, vecs: (
+                    l(env, tbls, lits, vecs) & r(env, tbls, lits, vecs))
+            return lambda env, tbls, lits, vecs: (
+                l(env, tbls, lits, vecs) | r(env, tbls, lits, vecs))
         if tag == "not":
             x = walk(p[1])
-            return lambda env, tbls: ~x(env, tbls)
+            return lambda env, tbls, lits, vecs: ~x(env, tbls, lits, vecs)
         if tag in ("isnull", "notnull"):
             x = walk(p[1])
             if tag == "notnull":
-                return lambda env, tbls: ~_is_null(jnp.asarray(x(env, tbls)))
-            return lambda env, tbls: _is_null(jnp.asarray(x(env, tbls)))
+                return lambda env, tbls, lits, vecs: ~_is_null(
+                    jnp.asarray(x(env, tbls, lits, vecs)))
+            return lambda env, tbls, lits, vecs: _is_null(
+                jnp.asarray(x(env, tbls, lits, vecs)))
         if tag == "isin":
             x = walk(p[1])
             vals = p[2]
             if not vals:   # empty whitelist matches nothing
-                return lambda env, tbls: jnp.zeros(
-                    jnp.shape(jnp.asarray(x(env, tbls))), bool)
+                return lambda env, tbls, lits, vecs: jnp.zeros(
+                    jnp.shape(jnp.asarray(x(env, tbls, lits, vecs))), bool)
             dt = np.float32 if any(isinstance(c, float) for c in vals) \
                 else np.int32
             tbl = np.sort(np.asarray(vals, dt))
-            pad = (-tbl.size) % 8
+            pad = (-tbl.size) % _ISIN_PAD
             if pad:        # lane-align; max-duplicate padding never matches new values
                 tbl = np.concatenate([tbl, np.full(pad, tbl[-1], dt)])
             ti = len(tables)
             tables.append(tbl)
-            return lambda env, tbls: _sorted_member(
-                jnp.asarray(x(env, tbls)), tbls[ti])
+            return lambda env, tbls, lits, vecs: _sorted_member(
+                jnp.asarray(x(env, tbls, lits, vecs)), tbls[ti])
+        if tag == "hisin":
+            x = walk(p[1])
+            slot, n, isfloat = int(p[2]), int(p[3]), bool(p[4])
+            if n == 0:     # empty whitelist matches nothing (no operand)
+                return lambda env, tbls, lits, vecs: jnp.zeros(
+                    jnp.shape(jnp.asarray(x(env, tbls, lits, vecs))), bool)
+            if slot not in [s for s, _, _ in vec_slots]:
+                vec_slots.append((slot, n, isfloat))
+            return lambda env, tbls, lits, vecs: _sorted_member(
+                jnp.asarray(x(env, tbls, lits, vecs)), vecs[slot])
         raise ValueError(f"unknown Expr param tag {tag!r}")
 
     if expr_param[0] not in _BOOL_TAGS:
@@ -228,25 +282,39 @@ def compile_predicate(expr_param: Tuple):
             f"pallas predicate engine needs a boolean-valued expression root, "
             f"got tag {expr_param[0]!r} (use the jnp engine)")
     eval_fn = walk(expr_param)
-    return tuple(columns), tuple(tables), eval_fn
+    return (tuple(columns), tuple(tables), eval_fn,
+            tuple(lit_slots), tuple(vec_slots))
 
 
 # ---------------------------------------------------------------------------
 # kernel + wrapper
 # ---------------------------------------------------------------------------
-def _make_kernel(eval_fn: Callable, names: Sequence[str], n_tables: int):
+def _make_kernel(eval_fn: Callable, names: Sequence[str], n_tables: int,
+                 vec_slot_ids: Sequence[int], lit_slot_ids: Sequence[int],
+                 lit_bool: Sequence[bool]):
+    """Kernel ref order: [cols...] [static isin tables...] [hoisted isin
+    vectors...] [hoisted lit SMEM scalars...] [packed valid] | [words, pc].
+    Bool lits are staged as int32 (SMEM-safe) and cast back here."""
     def _kernel(*refs):
-        col_refs = refs[:len(names)]
-        tbl_refs = refs[len(names):len(names) + n_tables]
-        valid_ref = refs[len(names) + n_tables]
+        k = len(names)
+        col_refs = refs[:k]
+        tbl_refs = refs[k:k + n_tables]
+        k += n_tables
+        vec_refs = refs[k:k + len(vec_slot_ids)]
+        k += len(vec_slot_ids)
+        lit_refs = refs[k:k + len(lit_slot_ids)]
+        valid_ref = refs[k + len(lit_slot_ids)]
         words_ref, pc_ref = refs[-2:]
 
         from repro.kernels import unpack_words_block
 
         env = {nm: r[...] for nm, r in zip(names, col_refs)}
         tbls = [r[...] for r in tbl_refs]
+        vecs = {s: r[...] for s, r in zip(vec_slot_ids, vec_refs)}
+        lits = {s: (r[0] != 0 if b else r[0])
+                for s, b, r in zip(lit_slot_ids, lit_bool, lit_refs)}
         # validity arrives PACKED (1 bit/row of HBM); expand in VMEM only
-        m = eval_fn(env, tbls) & unpack_words_block(valid_ref[...])
+        m = eval_fn(env, tbls, lits, vecs) & unpack_words_block(valid_ref[...])
 
         B = m.shape[0]
         lanes = jax.lax.broadcasted_iota(jnp.uint32, (B // 32, 32), 1)
@@ -257,9 +325,40 @@ def _make_kernel(eval_fn: Callable, names: Sequence[str], n_tables: int):
     return _kernel
 
 
+def _stage_hoisted(lit_slots: Sequence[int],
+                   vec_slots: Sequence[Tuple[int, int, bool]],
+                   params: Tuple[Dict[int, jax.Array], Dict[int, jax.Array]]):
+    """Stage bound ``{slot: value}`` maps as kernel operands (traced — runs
+    inside the jit): each ``hlit`` slot becomes a ``(1,)`` scalar (bools as
+    int32, SMEM has no bool lanes) and each ``hisin`` slot a sorted vector
+    tail-padded to the lane quantum with its own max (padding duplicates an
+    existing member, so membership is unchanged)."""
+    b_lits, b_vecs = params
+    lit_ops, lit_bool = [], []
+    for slot in lit_slots:
+        v = jnp.asarray(b_lits[slot])
+        isb = v.dtype == jnp.bool_
+        lit_bool.append(isb)
+        lit_ops.append(v.reshape(1).astype(jnp.int32) if isb
+                       else v.reshape(1))
+    vec_ops = []
+    for slot, n, _ in vec_slots:
+        v = jnp.asarray(b_vecs[slot])
+        if v.shape != (n,):
+            raise ValueError(f"hoisted whitelist slot {slot}: bound value "
+                             f"has shape {v.shape}, expr expects ({n},)")
+        s = jnp.sort(v)
+        pad = (-n) % _ISIN_PAD
+        if pad:
+            s = jnp.concatenate([s, jnp.full((pad,), s[-1], s.dtype)])
+        vec_ops.append(s)
+    return lit_ops, tuple(lit_bool), vec_ops
+
+
 def predicate_bitset_blocks(expr_param: Tuple, cols: Dict[str, jax.Array],
                             valid_words: jax.Array, block: int = DEFAULT_BLOCK,
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            params: Tuple[Dict, Dict] = ({}, {})):
     """One fused pass: evaluate ``expr_param`` over ``cols`` AND the packed
     ``valid_words`` bitset (``core.bitset`` layout — validity is streamed at
     1 bit/row, not a bool column).
@@ -267,26 +366,36 @@ def predicate_bitset_blocks(expr_param: Tuple, cols: Dict[str, jax.Array],
     Returns ``(words, popcounts)`` — the packed uint32 bitset (n/32 words)
     and the per-block popcounts.  Column length must be a multiple of
     ``block`` (``predicate_bitset`` pads); ``block`` a multiple of 32;
-    ``valid_words`` holds exactly n/32 words.
+    ``valid_words`` holds exactly n/32 words.  ``params`` is the bound
+    ``(lits, vecs)`` pair backing any hoisted slot refs in the expr.
     """
     interpret = default_interpret() if interpret is None else interpret
     assert block % 32 == 0, block
     n = valid_words.shape[0] * 32
     assert n % block == 0, (n, block)
     grid = (n // block,)
-    names, tables, eval_fn = compile_predicate(expr_param)
+    names, tables, eval_fn, lit_slots, vec_slots = compile_predicate(
+        expr_param)
     missing = [nm for nm in names if nm not in cols]
     if missing:
         raise KeyError(f"predicate reads absent column(s) {missing}")
+    lit_ops, lit_bool, vec_ops = _stage_hoisted(lit_slots, vec_slots, params)
 
     in_specs = [pl.BlockSpec((block,), lambda g: (g,)) for _ in names]
     in_specs += [pl.BlockSpec((int(t.size),), lambda g: (0,)) for t in tables]
+    in_specs += [pl.BlockSpec((int(v.shape[0]),), lambda g: (0,))
+                 for v in vec_ops]
+    # scalar literal params live in SMEM — one (1,) ref per slot, read
+    # whole (no index_map: scalars are grid-invariant)
+    in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM) for _ in lit_ops]
     in_specs += [pl.BlockSpec((block // 32,), lambda g: (g,))]
     operands = ([cols[nm] for nm in names]
                 + [jnp.asarray(t) for t in tables]
+                + vec_ops + lit_ops
                 + [valid_words.astype(jnp.uint32)])
     return pl.pallas_call(
-        _make_kernel(eval_fn, names, len(tables)),
+        _make_kernel(eval_fn, names, len(tables),
+                     [s for s, _, _ in vec_slots], lit_slots, lit_bool),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -311,7 +420,8 @@ def _pad_to(x: jax.Array, mult: int, fill=0):
 
 @functools.partial(jax.jit,
                    static_argnames=("expr_param", "block", "interpret", "n"))
-def _predicate_bitset_jit(columns: Dict[str, jax.Array], words: jax.Array, *,
+def _predicate_bitset_jit(columns: Dict[str, jax.Array], words: jax.Array,
+                          params: Tuple[Tuple, Tuple], *,
                           expr_param: Tuple, block: int,
                           interpret: Optional[bool], n: int):
     if n == 0:
@@ -319,14 +429,15 @@ def _predicate_bitset_jit(columns: Dict[str, jax.Array], words: jax.Array, *,
     cols = {nm: _pad_to(c, block) for nm, c in columns.items()}
     wp = _pad_to(words, block // 32)
     out, pc = predicate_bitset_blocks(expr_param, cols, wp, block=block,
-                                      interpret=interpret)
+                                      interpret=interpret, params=params)
     return out[: (n + 31) // 32], pc.sum().astype(jnp.int32)
 
 
 def predicate_bitset(columns: Dict[str, jax.Array], valid: jax.Array, *,
                      expr_param: Tuple, block: int = DEFAULT_BLOCK,
                      interpret: Optional[bool] = None,
-                     capacity: Optional[int] = None):
+                     capacity: Optional[int] = None,
+                     params: Optional[Tuple[Tuple, Tuple]] = None):
     """Fused predicate -> packed bitset over a table's columns.
 
     ``valid`` is the table's validity: the canonical packed uint32 word form
@@ -340,9 +451,24 @@ def predicate_bitset(columns: Dict[str, jax.Array], valid: jax.Array, *,
     passed into the jit boundary — handing in a whole wide table costs
     nothing extra and never retraces on unrelated columns.  ``capacity``
     names the row count when ``valid`` is packed; it defaults to the first
-    column's length.
+    column's length.  ``params`` is the bound ``(lits, vecs)`` pair backing
+    hoisted slot refs (normalized plans); exprs with ``hlit``/``hisin``
+    leaves raise without it — the same contract as evaluating a hoisted
+    Expr outside ``expr.bound_params``.  Literal *values* are traced
+    operands, so they never retrace or recompile this jit.
     """
-    names, _, _ = compile_predicate(expr_param)
+    names, _, _, lit_slots, vec_slots = compile_predicate(expr_param)
+    b_lits, b_vecs = params if params is not None else ((), ())
+    want = max(list(lit_slots) + [-1]), max([s for s, _, _ in vec_slots]
+                                            + [-1])
+    if want[0] >= len(b_lits) or want[1] >= len(b_vecs):
+        raise RuntimeError(
+            "expr has hoisted slot refs with no bound value; pass "
+            "params=(lits, vecs) (see expr.bound_params)")
+    # subset to the slots THIS expr reads — other nodes' literals must not
+    # become dead operands of (or retrace triggers for) this executable
+    used = ({s: b_lits[s] for s in lit_slots},
+            {s: b_vecs[s] for s, _, _ in vec_slots})
     missing = [nm for nm in names if nm not in columns]
     if missing:
         raise KeyError(f"predicate reads absent column(s) {missing}")
@@ -360,5 +486,5 @@ def predicate_bitset(columns: Dict[str, jax.Array], valid: jax.Array, *,
 
         words = _pack(valid)
     return _predicate_bitset_jit({nm: columns[nm] for nm in names}, words,
-                                 expr_param=expr_param, block=block,
+                                 used, expr_param=expr_param, block=block,
                                  interpret=interpret, n=capacity)

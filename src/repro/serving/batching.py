@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -37,7 +38,14 @@ class SlotScheduler:
     many queued items as free slots (and quotas) allow, in priority order
     (higher first) then submission order; ``release(key)`` retires one slot.
     Over-quota items stay queued *in place* — later items of other keys may
-    overtake them, but order within a key is always FIFO.
+    overtake them, but order within a key is always FIFO: the heap entries
+    carry a monotonic sequence counter, so equal-priority items never fall
+    through to comparing ``key``/``item`` (which may not be orderable at
+    all) and never reorder within a priority band.
+
+    Thread-safe: the cohort-query service releases slots from its
+    realization worker while the main thread admits, so every mutation
+    holds an internal lock.
     """
 
     def __init__(self, n_slots: int, per_key_quota: Optional[int] = None,
@@ -51,51 +59,58 @@ class SlotScheduler:
         self._seq = itertools.count()
         self._inflight: Dict[Any, int] = {}
         self._live = 0
+        self._lock = threading.Lock()
 
     def queued(self) -> int:
-        return len(self._heap)
+        with self._lock:
+            return len(self._heap)
 
     def inflight(self) -> int:
-        return self._live
+        with self._lock:
+            return self._live
 
     def submit(self, item: Any, key: Any = None, priority: int = 0) -> bool:
         """Enqueue; returns False (rejecting the item) when the queue is
         at ``max_queue`` depth."""
-        if self.max_queue is not None and len(self._heap) >= self.max_queue:
-            return False
-        heapq.heappush(self._heap,
-                       (-int(priority), next(self._seq), key, item))
-        return True
+        with self._lock:
+            if self.max_queue is not None \
+                    and len(self._heap) >= self.max_queue:
+                return False
+            heapq.heappush(self._heap,
+                           (-int(priority), next(self._seq), key, item))
+            return True
 
     def admit(self) -> List[Tuple[Any, Any]]:
         """Fill free slots from the queue; returns admitted ``(item, key)``
         pairs in admission order."""
         admitted: List[Tuple[Any, Any]] = []
         skipped: List[Tuple[int, int, Any, Any]] = []
-        while self._heap and self._live < self.n_slots:
-            entry = heapq.heappop(self._heap)
-            _, _, key, item = entry
-            if (self.per_key_quota is not None
-                    and self._inflight.get(key, 0) >= self.per_key_quota):
-                skipped.append(entry)     # over quota: stays queued in place
-                continue
-            self._inflight[key] = self._inflight.get(key, 0) + 1
-            self._live += 1
-            admitted.append((item, key))
-        for entry in skipped:
-            heapq.heappush(self._heap, entry)
+        with self._lock:
+            while self._heap and self._live < self.n_slots:
+                entry = heapq.heappop(self._heap)
+                _, _, key, item = entry
+                if (self.per_key_quota is not None
+                        and self._inflight.get(key, 0) >= self.per_key_quota):
+                    skipped.append(entry)  # over quota: stays queued in place
+                    continue
+                self._inflight[key] = self._inflight.get(key, 0) + 1
+                self._live += 1
+                admitted.append((item, key))
+            for entry in skipped:
+                heapq.heappush(self._heap, entry)
         return admitted
 
     def release(self, key: Any = None) -> None:
         """Retire one in-flight item admitted under ``key``."""
-        if self._live <= 0:
-            raise RuntimeError("release() without a live admission")
-        self._live -= 1
-        left = self._inflight.get(key, 0) - 1
-        if left > 0:
-            self._inflight[key] = left
-        else:
-            self._inflight.pop(key, None)
+        with self._lock:
+            if self._live <= 0:
+                raise RuntimeError("release() without a live admission")
+            self._live -= 1
+            left = self._inflight.get(key, 0) - 1
+            if left > 0:
+                self._inflight[key] = left
+            else:
+                self._inflight.pop(key, None)
 
 
 @dataclasses.dataclass

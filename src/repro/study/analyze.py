@@ -40,8 +40,9 @@ mirror this registry):
                (error when it also breaks the n_shards split quantum)
   SP008 warn   predicate not pallas-compilable (oversized isin whitelist /
                non-boolean root) — executor falls back to the jnp engine
-  SP009 info   pallas predicate carries literals; ``normalize()`` will hoist
-               them and demote the node to jnp when served
+  SP009 info   pallas predicate carries literals; ``normalize()`` hoists
+               them into traced slots that ride as kernel operands (the
+               node keeps the pallas engine when served)
   SP010 info   concat of non-word-aligned capacities expands validity to a
                bool mask (loses the packed-bitset fast path)
   SP011 warn   expand_join without a planned capacity (trace-time
@@ -82,7 +83,7 @@ DIAGNOSTIC_CODES: Mapping[str, Tuple[str, str]] = {
     "SP006": ("error", "join key dtype mismatch"),
     "SP007": ("warn", "capacity misaligned to the 32-bit validity word"),
     "SP008": ("warn", "predicate not pallas-compilable; jnp fallback"),
-    "SP009": ("info", "literals will demote this pallas node to jnp"),
+    "SP009": ("info", "literals hoist into pallas kernel operands"),
     "SP010": ("info", "concat misalignment expands validity to bool"),
     "SP011": ("warn", "expand_join capacity left to trace-time slack"),
     "SP012": ("error", "op wired to inputs of the wrong kind"),
@@ -647,13 +648,15 @@ def _check_predicate(node, i: int, left: Optional[NodeFact], emit,
                  "not kernel-compilable (non-boolean root); the executor "
                  "falls back to the jnp engine",
                  hint="the mask root must be a comparison/boolean op")
-        if _has_concrete_literal(param):
+        if _has_concrete_literal(param) and _pk.compilable(param):
             emit("SP009", i, "pallas-stamped mask carries inline literals; "
-                 "normalize() hoists them into traced slots and demotes the "
-                 "node to the jnp engine when served",
-                 hint="the service records the demotion per tenant "
-                      "(ServiceStats); teaching the kernel to take hoisted "
-                      "operands is a ROADMAP item")
+                 "normalize() hoists them into traced slots that enter the "
+                 "kernel as operands (scalar literals via SMEM, sorted "
+                 "isin whitelists as padded VMEM vectors) — the node keeps "
+                 "the pallas engine when served",
+                 hint="structurally-equal plans with different literal "
+                      "values share one compiled executable; only "
+                      "kernel-infeasible stamps (SP008) demote to jnp")
 
 
 def _narrow(conj, states: Dict[str, _ColState]) -> None:

@@ -74,6 +74,21 @@ JOURNAL_NAME = "journal.jsonl"
 CHUNK_UNSAFE_OPS = ("transform", "dedupe")
 
 
+def _fsync_dir(path: str) -> None:
+    """Durably record directory entries (the renamed meta.json) — best
+    effort on platforms whose directories cannot be opened for fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def chunk_dependent_ids(plan: Plan, source: str) -> Set[int]:
     """Node ids whose value depends on the chunked ``source`` — everything
     reachable from its scans.  Complement = resident lineage (dimension
@@ -283,19 +298,42 @@ class ChunkedExecutor:
 
     def _read_journal(self, stamp: str) -> Set[int]:
         """Completed chunk ids from a valid journal; a stamp mismatch (other
-        plan/store/engine) discards the journal rather than mixing state."""
+        plan/store/engine) discards the journal rather than mixing state.
+
+        Parsed line by line: a kill mid-append leaves a torn final line, and
+        that must cost exactly the one uncommitted chunk — not every chunk
+        before it.  Parsing stops at the first undecodable line; everything
+        already read stays resumable (the append-only protocol guarantees
+        all prior lines are complete).  The valid prefix length is kept in
+        ``_journal_keep_bytes`` so ``_start_journal`` can truncate the torn
+        tail before new lines append onto it."""
         path = self._journal_path()
+        self._journal_keep_bytes = None
         if not os.path.exists(path):
             return set()
-        done: Set[int] = set()
+        lines = []
+        keep = 0
         try:
-            with open(path) as f:
-                lines = [json.loads(ln) for ln in f if ln.strip()]
-        except (json.JSONDecodeError, OSError):
+            with open(path, "rb") as f:
+                for raw in f:
+                    if not raw.endswith(b"\n"):
+                        break            # unterminated tail: treat as torn
+                    ln = raw.decode("utf-8", errors="replace")
+                    if not ln.strip():
+                        keep += len(raw)
+                        continue
+                    try:
+                        lines.append(json.loads(ln))
+                    except json.JSONDecodeError:
+                        break            # torn tail: keep the valid prefix
+                    keep += len(raw)
+            self._journal_keep_bytes = keep
+        except OSError:
             return set()
         if not lines or lines[0].get("kind") != "header" \
                 or lines[0].get("stamp") != stamp:
             return set()
+        done: Set[int] = set()
         for ln in lines[1:]:
             if ln.get("kind") == "chunk":
                 done.add(int(ln["index"]))
@@ -305,7 +343,16 @@ class ChunkedExecutor:
         os.makedirs(self.checkpoint_dir, exist_ok=True)
         path = self._journal_path()
         if resumed:
-            return                       # keep appending to the valid journal
+            # keep appending to the valid journal — after cutting off any
+            # torn tail, or the next append would concatenate onto it and
+            # corrupt a good record
+            keep = getattr(self, "_journal_keep_bytes", None)
+            if keep is not None and keep < os.path.getsize(path):
+                with open(path, "r+b") as f:
+                    f.truncate(keep)
+                    f.flush()
+                    os.fsync(f.fileno())
+            return
         with open(path, "w") as f:
             f.write(json.dumps({"kind": "header", "stamp": stamp,
                                 "n_chunks": self.store.n_chunks}) + "\n")
@@ -339,6 +386,10 @@ class ChunkedExecutor:
         with open(tmp, "w") as f:
             json.dump(meta, f)
         os.replace(tmp, os.path.join(sd, "meta.json"))
+        # the rename itself must be durable before the journal line commits
+        # the chunk, or a crash could journal a chunk whose meta.json the
+        # directory never learned about
+        _fsync_dir(sd)
         with open(self._journal_path(), "a") as f:
             f.write(json.dumps({"kind": "chunk", "index": ci}) + "\n")
             f.flush()

@@ -98,9 +98,17 @@ def _sp007() -> Tuple[Plan, Dict[str, Any]]:
 
 
 def _sp008() -> Tuple[Plan, Dict[str, Any]]:
+    # an isin whitelist past the kernel's VMEM operand budget, force-stamped
+    # pallas (the optimizer would refuse the stamp): the one shape that
+    # still demotes to jnp when served now that hoisted literals are
+    # first-class kernel operands
+    from repro.study.expr import as_param
+
     b = PlanBuilder()
     t = _scan(b)
-    t = b.predicate(t, col("x").isin(range(MAX_ISIN_VALUES + 1)))
+    t = b.add("predicate", (t,),
+              expr=as_param(col("x").isin(range(MAX_ISIN_VALUES + 1))),
+              engine="pallas", bitset_block=1024, bitset_word="uint32")
     return _out(b, t), {}
 
 
@@ -109,8 +117,9 @@ def _sp009() -> Tuple[Plan, Dict[str, Any]]:
     t = _scan(b)
     t = b.predicate(t, col("x") > 5)
     plan = _out(b, t)
-    # stamp the pallas engine the way the optimizer does; the literal 5
-    # stays inline, which is exactly what normalize() will hoist + demote
+    # stamp the pallas engine the way the optimizer does; the inline
+    # literal 5 is what normalize() hoists into a traced slot that rides
+    # as a kernel operand (the node keeps pallas when served)
     return _opt.assign_engines(plan, predicate_engine="pallas"), {}
 
 

@@ -18,6 +18,7 @@ from the log alone (see ``api.flow_rows_from_log``).
 from __future__ import annotations
 
 import inspect
+import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -57,6 +58,10 @@ TRANSFORMS = _registry()
 
 _JIT_CACHE: Dict[Tuple, Callable] = {}
 _JIT_STATS: Dict[str, int] = {"compiles": 0, "hits": 0}
+# the serving layer's realization worker may build/look up executables
+# concurrently with the main thread (e.g. featurize replays) — one lock
+# guards the cache dict and its counters
+_JIT_LOCK = threading.Lock()
 
 
 def jit_cache_info() -> Dict[str, int]:
@@ -64,13 +69,15 @@ def jit_cache_info() -> Dict[str, int]:
     closures built — the executable count the serving layer budgets), and
     ``hits`` (runner lookups served by an existing entry).  Counters reset
     with ``clear_jit_cache``."""
-    return {"plans": len(_JIT_CACHE), **_JIT_STATS}
+    with _JIT_LOCK:
+        return {"plans": len(_JIT_CACHE), **_JIT_STATS}
 
 
 def clear_jit_cache() -> None:
-    _JIT_CACHE.clear()
-    _JIT_STATS["compiles"] = 0
-    _JIT_STATS["hits"] = 0
+    with _JIT_LOCK:
+        _JIT_CACHE.clear()
+        _JIT_STATS["compiles"] = 0
+        _JIT_STATS["hits"] = 0
 
 
 def cached_executable(key: Tuple, build: Callable[[], Callable]) -> Callable:
@@ -80,13 +87,14 @@ def cached_executable(key: Tuple, build: Callable[[], Callable]) -> Callable:
     the process (and the serving layer's compile budget covers all three
     physical strategies).  ``build`` runs once per distinct ``key``; later
     lookups count as hits."""
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
-        _JIT_STATS["compiles"] += 1
-        fn = _JIT_CACHE[key] = build()
-    else:
-        _JIT_STATS["hits"] += 1
-    return fn
+    with _JIT_LOCK:
+        fn = _JIT_CACHE.get(key)
+        if fn is None:
+            _JIT_STATS["compiles"] += 1
+            fn = _JIT_CACHE[key] = build()
+        else:
+            _JIT_STATS["hits"] += 1
+        return fn
 
 
 # ---------------------------------------------------------------------------
@@ -225,10 +233,14 @@ def _eval_node(node, ins, env: Dict[str, ColumnarTable], n_patients: int,
         eng = node.get("engine") or predicate_engine
         param = e.to_param()
         if eng == "pallas" and _pk.compilable(param):
+            # hoisted slot refs (normalized plans) become kernel operands:
+            # the bound (lits, vecs) pair rides along explicitly — the
+            # kernel module never reaches back into expr's binding stack
             words, cnt = _pk.predicate_bitset(
                 t.columns, t.valid, expr_param=param,
                 block=node.get("bitset_block") or _pk.DEFAULT_BLOCK,
-                capacity=t.capacity)
+                capacity=t.capacity,
+                params=_expr.current_bound_params())
             # the kernel's packed words ARE the table's validity — no unpack
             # hop: they flow into cohort_from_events, the cohort bitset
             # algebra and the compaction keep-mask as 1 bit/row metadata

@@ -35,6 +35,7 @@ import contextlib
 import dataclasses
 import functools
 import operator as _op
+import threading
 from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple, \
     Union
 
@@ -52,7 +53,7 @@ __all__ = [
     "Expr", "Col", "Lit", "col", "lit", "all_of", "any_of",
     "expr_from_param", "fused_predicate", "node_predicate",
     "param_conjuncts", "const_fold_param",
-    "HoistedLit", "HoistedIsIn", "bound_params",
+    "HoistedLit", "HoistedIsIn", "bound_params", "current_bound_params",
     "CohortRef", "CohortCombine", "parse_cohort_expr",
 ]
 
@@ -379,9 +380,18 @@ class NullTest(Expr):
 # structurally-equal plans from different tenants serialize identically; the
 # actual values are passed to the compiled program as *traced arguments* and
 # bound here for the duration of one trace/evaluation.  The stack is consulted
-# synchronously while jax traces the jitted body, so a plain module-level
-# stack (no thread-locals) matches how the executor drives tracing.
-_BOUND_PARAMS: List[Tuple[Sequence, Sequence]] = []
+# synchronously while jax traces the jitted body; it is thread-LOCAL because
+# the cohort-query service traces on its main thread while a realization
+# worker concurrently replays host-side algebra — each thread sees only its
+# own bindings.
+_BOUND_LOCAL = threading.local()
+
+
+def _bound_stack() -> List[Tuple[Sequence, Sequence]]:
+    stack = getattr(_BOUND_LOCAL, "stack", None)
+    if stack is None:
+        stack = _BOUND_LOCAL.stack = []
+    return stack
 
 
 @contextlib.contextmanager
@@ -390,19 +400,30 @@ def bound_params(lits: Sequence, vecs: Sequence):
 
     ``lits[i]`` backs ``HoistedLit(slot=i)`` (a scalar, possibly traced);
     ``vecs[j]`` backs ``HoistedIsIn(slot=j)`` (a 1-D whitelist array)."""
-    _BOUND_PARAMS.append((tuple(lits), tuple(vecs)))
+    stack = _bound_stack()
+    stack.append((tuple(lits), tuple(vecs)))
     try:
         yield
     finally:
-        _BOUND_PARAMS.pop()
+        stack.pop()
+
+
+def current_bound_params() -> Optional[Tuple[Sequence, Sequence]]:
+    """The innermost ``bound_params`` binding on this thread, or None.  The
+    executor hands this to the Pallas predicate kernel so hoisted slots
+    become kernel operands (``kernels.predicate`` stays import-light — it
+    never reads this module's state itself)."""
+    stack = _bound_stack()
+    return stack[-1] if stack else None
 
 
 def _bound(kind: int, slot: int):
-    if not _BOUND_PARAMS:
+    stack = _bound_stack()
+    if not stack:
         raise RuntimeError(
             "hoisted Expr evaluated outside expr.bound_params(...); "
             "normalized plans need their literal vector bound at execution")
-    vec = _BOUND_PARAMS[-1][kind]
+    vec = stack[-1][kind]
     if slot >= len(vec):
         raise IndexError(f"hoisted slot {slot} out of range "
                          f"({len(vec)} bound)")

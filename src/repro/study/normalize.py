@@ -26,11 +26,13 @@ canonical form where that no longer happens:
     order ``expr.fused_predicate`` evaluates them), so equal predicates
     serialize equally regardless of how they were built.
 
-Hoisted predicates evaluate through the jnp mask engine: the Pallas
-Expr->bitset codegen specializes on literal values, so nodes stamped
-``engine="pallas"`` are demoted to ``"jnp"`` when hoisting touches them
-(a normalized plan trades the fused kernel for cross-tenant compile sharing;
-see ROADMAP for the value-generic kernel follow-on).
+Hoisted predicates keep the Pallas engine: the Expr->bitset codegen takes
+hoisted literals as kernel *operands* (SMEM scalars, sorted VMEM whitelist
+vectors), so a normalized plan gets cross-tenant compile sharing AND the
+fused kernel.  Demotion to ``"jnp"`` is now the exception — it happens only
+when the hoisted form is not kernel-compilable (oversized ``isin``
+whitelist, non-boolean root), and ``NormalPlan.demoted`` records exactly
+those nodes.
 
 The module also provides the service's subgraph identity: ``cut_points``
 picks the structurally cacheable nodes (scan/predicate/join prefixes) and
@@ -109,6 +111,30 @@ def _has_hoisted(p: Tuple) -> bool:
     return any(_has_hoisted(x) for x in p)
 
 
+class _ParamView:
+    """Minimal Node stand-in (``.op`` + ``.get``) so ``expr.node_predicate``
+    can re-express a *candidate* hoisted node before it is emitted."""
+
+    def __init__(self, op: str, params: Dict[str, Any]):
+        self.op = op
+        self._p = params
+
+    def get(self, k: str, default=None):
+        return self._p.get(k, default)
+
+
+def _kernel_compilable(op: str, params: Dict[str, Any]) -> bool:
+    """Post-hoisting engine feasibility: hoisted literals are Pallas kernel
+    operands, so a hoisted predicate stays on the pallas engine whenever its
+    combined Expr still compiles (boolean root, membership budget — hoisted
+    whitelists count their structural ``n``)."""
+    from repro.kernels import predicate as _pk
+    from repro.study.expr import node_predicate
+
+    e = node_predicate(_ParamView(op, params))
+    return e is not None and _pk.compilable(e.to_param())
+
+
 def _resolve_expr(p: Tuple, lits: Sequence, vecs: Sequence) -> Tuple:
     """Inverse of hoisting (for content hashing): slot refs -> concrete
     values."""
@@ -166,9 +192,11 @@ class NormalPlan:
     node_map: Tuple[Tuple[int, int], ...]
     out_map: Tuple[Tuple[str, str], ...]
     # canonical node ids whose predicate engine normalization demoted
-    # pallas -> jnp (hoisted literals; the kernel specializes on values).
-    # The service audits these into the OperationLog + per-tenant
-    # ServiceStats, and the analyzer's SP009 diagnostic predicts them.
+    # pallas -> jnp.  Hoisted literals ride the kernel as operands, so this
+    # is the EXCEPTION: only hoisted predicates the kernel cannot take
+    # (oversized whitelist / non-boolean root) appear here.  The service
+    # audits these into the OperationLog + per-tenant ServiceStats, and the
+    # analyzer's SP009 diagnostic predicts them.
     demoted: Tuple[int, ...] = ()
 
     def orig_to_canon(self) -> Dict[int, int]:
@@ -215,13 +243,17 @@ def normalize(plan: Plan) -> NormalPlan:
             elif k in _EXPRS_KEYS and v is not None:
                 v = tuple(_hoist_expr(e, lits, vecs) for e in v)
             params[k] = v
-        demote = (node.op in PREDICATE_OPS
-                  and params.get("engine") == "pallas"
-                  and any(_has_hoisted(v) for k, v in params.items()
-                          if k in _EXPR_KEYS + _EXPRS_KEYS and v is not None))
+        hoisted = (node.op in PREDICATE_OPS
+                   and params.get("engine") == "pallas"
+                   and any(_has_hoisted(v) for k, v in params.items()
+                           if k in _EXPR_KEYS + _EXPRS_KEYS
+                           and v is not None))
+        demote = hoisted and not _kernel_compilable(node.op, params)
         if demote:
-            # the Pallas codegen specializes on literal values; hoisted
-            # predicates run the value-generic jnp engine instead
+            # hoisted literals are kernel operands now, so demotion is the
+            # exception: only hoisted predicates the kernel still cannot
+            # take (oversized whitelist, non-boolean root) fall back to the
+            # value-generic jnp engine
             params["engine"] = "jnp"
             params.pop("bitset_block", None)
             params.pop("bitset_word", None)

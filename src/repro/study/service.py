@@ -30,22 +30,43 @@ a traced hit flag — on hit the provided cached table flows through, on miss
 the node computes in place.  XLA executes only the taken branch at runtime,
 and the flag is a traced scalar, so the hit pattern never retraces.
 
+Async step pipeline: each admitted ticket runs in two stages.  The
+*device-submit* stage (optimize, analyze, normalize, program lookup, cache
+lookup, dispatch of the compiled program) runs on the calling thread; the
+*host-realize* stage (stats transfer, cache insert, ``_finish_result``
+replay) runs on a single realization worker, double-buffer style (the same
+overlap idiom as ``study.chunked``), so device execution of the next
+admitted ticket overlaps host materialization of the previous one.
+Scheduler slots release when realization *finishes* — the in-flight window
+bounds work actually in flight, not just dispatches.  A submit-stage cache miss
+publishes its cut hash in an in-flight registry; a later admission wanting
+the same subgraph waits for that realization's insert instead of
+recomputing, so pipelined hit/miss accounting matches the synchronous
+mode (``ServiceConfig.pipeline=False``) exactly.
+
+Sharded residency: with ``mesh=`` the resident tables are pre-padded to the
+mesh word quantum (``distributed.pipeline.pad_tables_for_mesh``) and the
+*same* normalization sharing + subgraph cache apply: the compiled program is
+a ``shard_map`` body (mirroring ``execute_plan_sharded``'s conventions —
+patient-partitioned tables in, psum'd bitsets/counts/stats out) with the
+``lax.cond`` hit injection inside, cached cut tables crossing as global
+``P(axis)``-sharded operands.  Cache keys and program keys are salted with
+the mesh shape + axis so local and sharded entries never collide.  Cut
+nodes whose shard-local capacity is not 32-aligned are not injected (their
+validity words would straddle shard boundaries); they compute in place.
+
 Results are realized through ``Study._finish_result`` — the exact code path
 ``Study.run`` uses — so every admitted query's events, cohorts, flowcharts
 and features are bit-identical to a solo run of the same study (the
 acceptance bar ``benchmarks/serving_bench.py`` gates on).
-
-Sharded residency: with ``mesh=`` the resident tables are pre-padded to the
-mesh word quantum (``distributed.pipeline.pad_tables_for_mesh``) and queries
-run through ``execute_plan_sharded``; normalization sharing and the subgraph
-cache currently apply to the local path only (the sharded plan cache already
-dedupes by structure).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -67,7 +88,7 @@ from repro.study.analyze import PlanValidationError, analyze as _analyze_plan
 from repro.study.api import Study, StudyResult
 from repro.study.expr import bound_params
 from repro.study.optimizer import OPTIMIZER_VERSION
-from repro.study.plan import Plan, STATS_OPS
+from repro.study.plan import COHORT_OPS, Plan, STATS_OPS, TABLE_OPS
 
 __all__ = ["CohortQueryService", "ServiceConfig", "ServiceStats",
            "TenantStats", "QueryTicket"]
@@ -84,6 +105,7 @@ class ServiceConfig:
     cache_budget_bytes: int = 256 << 20   # subgraph-cache LRU budget
     engine: str = "xla"
     predicate_engine: Optional[str] = None  # None/"auto" resolve by backend
+    pipeline: bool = True                 # overlap realize with next submit
 
 
 @dataclasses.dataclass
@@ -113,6 +135,9 @@ class ServiceStats:
     table_version: int = 0
     plans_rejected: int = 0           # error-level static analysis findings
     demotions: int = 0                # pallas->jnp normalization demotions
+    submit_s: float = 0.0             # summed device-submit stage time
+    realize_s: float = 0.0            # summed host-realize stage time
+    wall_s: float = 0.0               # summed drain() wall time
 
     def tenant(self, name: str) -> TenantStats:
         return self.tenants.setdefault(name, TenantStats())
@@ -120,6 +145,14 @@ class ServiceStats:
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    def overlap_s(self) -> float:
+        """Wall time saved by the submit/realize pipeline: the summed stage
+        times minus the drain wall they actually took (0 when the service
+        has only been stepped outside ``drain``)."""
+        if not self.wall_s:
+            return 0.0
+        return max(0.0, self.submit_s + self.realize_s - self.wall_s)
 
     def snapshot(self) -> Dict[str, Any]:
         return {
@@ -136,6 +169,10 @@ class ServiceStats:
             "table_version": self.table_version,
             "plans_rejected": self.plans_rejected,
             "demotions": self.demotions,
+            "submit_s": round(self.submit_s, 6),
+            "realize_s": round(self.realize_s, 6),
+            "wall_s": round(self.wall_s, 6),
+            "overlap_s": round(self.overlap_s(), 6),
         }
 
 
@@ -154,6 +191,13 @@ class QueryTicket:
     cache_misses: int = 0
     compiled: bool = False            # this query built a new executable
     latency_s: float = 0.0
+    submit_s: float = 0.0             # device-submit stage time
+    realize_s: float = 0.0            # host-realize stage time
+    # in-flight cut registration (see _cut_lookup / _release_cuts)
+    _cut_evt: Optional[threading.Event] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _cut_hashes: List[str] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
 
 
 class _Count:
@@ -173,7 +217,7 @@ class _Program:
 
 @dataclasses.dataclass
 class _CacheEntry:
-    value: Any                         # device ColumnarTable
+    value: Any                         # device ColumnarTable (global rows)
     stats: Optional[Dict[str, int]]    # host FlatteningStats (STATS_OPS cuts)
     nbytes: int
 
@@ -195,9 +239,12 @@ def _zeros_like_struct(struct):
 class CohortQueryService:
     """Admit many tenants' Study plans against one resident table set.
 
-    Synchronous reference implementation: ``submit`` queues, ``step`` admits
-    one window and runs it, ``drain`` runs to empty.  See the module
-    docstring for the three-layer architecture.
+    ``submit`` queues, ``step`` admits one window and dispatches it,
+    ``drain`` runs to empty (blocking on in-flight realizations).  With
+    ``config.pipeline`` (the default) realization runs on a worker thread so
+    the next admission's device work overlaps it; ``pipeline=False`` is the
+    synchronous reference mode.  See the module docstring for the
+    three-layer architecture.
     """
 
     def __init__(self, tables: Dict[str, ColumnarTable],
@@ -221,6 +268,12 @@ class CohortQueryService:
         self._programs: Dict[Tuple, _Program] = {}
         self._cache: "OrderedDict[str, _CacheEntry]" = OrderedDict()
         self._cache_bytes = 0
+        # shared mutable state (stats, log, cache, in-flight registry) is
+        # touched from the main thread and the realization worker
+        self._lock = threading.RLock()
+        self._realizer: Optional[ThreadPoolExecutor] = None
+        self._pending: "deque[Tuple[QueryTicket, Future]]" = deque()
+        self._inflight_cuts: Dict[str, threading.Event] = {}
 
     @classmethod
     def from_npz_dir(cls, dirpath: str, **kwargs) -> "CohortQueryService":
@@ -254,20 +307,25 @@ class CohortQueryService:
         """Install a new table version: re-residents the star schema, bumps
         the version (invalidating every subgraph-cache entry — the version
         salts the content hashes — and dropping the cached entries' bytes),
-        and discards shape programs (table capacities may have changed)."""
-        self._version = int(version) if version is not None \
-            else self._version + 1
-        self.stats.table_version = self._version
-        dropped = len(self._cache)
-        self._cache.clear()
-        self._cache_bytes = 0
-        self.stats.cache_entries = 0
-        self.stats.cache_bytes = 0
-        self._programs.clear()
-        self._load_tables(tables)
-        self.log.record(op="service:update_tables", inputs={}, outputs={},
-                        params={"version": self._version,
-                                "cache_dropped": dropped})
+        and discards shape programs (table capacities may have changed).
+        Quiesces in-flight realizations first: they hold references into the
+        outgoing table set."""
+        self._quiesce()
+        with self._lock:
+            self._version = int(version) if version is not None \
+                else self._version + 1
+            self.stats.table_version = self._version
+            dropped = len(self._cache)
+            self._cache.clear()
+            self._cache_bytes = 0
+            self.stats.cache_entries = 0
+            self.stats.cache_bytes = 0
+            self._programs.clear()
+            self._load_tables(tables)
+            self.log.record(op="service:update_tables", inputs={},
+                            outputs={},
+                            params={"version": self._version,
+                                    "cache_dropped": dropped})
 
     # -- admission -----------------------------------------------------------
     def submit(self, study: Study, tenant: str = "default",
@@ -278,52 +336,81 @@ class CohortQueryService:
         t = QueryTicket(tenant=tenant, study=study, priority=int(priority),
                         seq=self._seq)
         self._seq += 1
-        ts = self.stats.tenant(tenant)
-        ts.submitted += 1
+        with self._lock:
+            self.stats.tenant(tenant).submitted += 1
         if not self._sched.submit(t, key=tenant, priority=priority):
             t.status = "rejected"
-            ts.rejected += 1
-            self.log.record(op=f"service:reject:{tenant}", inputs={},
-                            outputs={}, params={"queued": self._sched.queued()})
+            with self._lock:
+                self.stats.tenant(tenant).rejected += 1
+                self.log.record(op=f"service:reject:{tenant}", inputs={},
+                                outputs={},
+                                params={"queued": self._sched.queued()})
         return t
 
     def step(self) -> int:
         """Admit one window of queued tickets (priority order, per-tenant
-        quotas) and run them; returns the number admitted."""
+        quotas) and run their device-submit stage; returns the number
+        admitted.  With ``config.pipeline`` the host-realize stage is handed
+        to the realization worker and the slot releases when it completes;
+        otherwise it runs inline."""
+        self._reap(block=False)
         admitted = self._sched.admit()
         for ticket, tenant in admitted:
-            ts = self.stats.tenant(tenant)
-            ts.admitted += 1
+            with self._lock:
+                self.stats.tenant(tenant).admitted += 1
             try:
-                self._run_ticket(ticket)
-                ticket.status = "done"
-                ts.completed += 1
+                realize = self._submit_ticket(ticket)
             except PlanValidationError as e:
                 # static analysis rejected the plan at admission — it never
                 # touched the compile cache; distinct from runtime failures
-                ticket.status = "invalid"
-                ticket.error = e
-                ts.invalid += 1
-                self.stats.plans_rejected += 1
-                self.log.record(
-                    op=f"service:invalid:{tenant}", inputs={}, outputs={},
-                    params={"diagnostics": [str(d) for d in e.diagnostics
-                                            if d.severity == "error"][:8]})
-            except Exception as e:  # noqa: BLE001 — isolate tenant failures
-                ticket.status = "failed"
-                ticket.error = e
-                ts.failed += 1
-                self.log.record(op=f"service:failed:{tenant}", inputs={},
-                                outputs={}, params={"error": repr(e)})
-            finally:
+                with self._lock:
+                    ticket.status = "invalid"
+                    ticket.error = e
+                    self.stats.tenant(tenant).invalid += 1
+                    self.stats.plans_rejected += 1
+                    self.log.record(
+                        op=f"service:invalid:{tenant}", inputs={},
+                        outputs={},
+                        params={"diagnostics":
+                                [str(d) for d in e.diagnostics
+                                 if d.severity == "error"][:8]})
+                self._release_cuts(ticket)
                 self._sched.release(tenant)
+            except Exception as e:  # noqa: BLE001 — isolate tenant failures
+                with self._lock:
+                    ticket.status = "failed"
+                    ticket.error = e
+                    self.stats.tenant(tenant).failed += 1
+                    self.log.record(op=f"service:failed:{tenant}", inputs={},
+                                    outputs={}, params={"error": repr(e)})
+                self._release_cuts(ticket)
+                self._sched.release(tenant)
+            else:
+                if self.config.pipeline:
+                    self._pending.append(
+                        (ticket,
+                         self._pool().submit(self._realize_ticket, ticket,
+                                             realize)))
+                else:
+                    self._realize_ticket(ticket, realize)
         return len(admitted)
 
     def drain(self) -> None:
-        """Run until the queue is empty."""
-        while self._sched.queued():
-            if not self.step():
-                break
+        """Run until the queue is empty and every in-flight realization has
+        resolved.  The elapsed wall accrues into ``stats.wall_s`` — the
+        baseline the pipeline's ``overlap_s`` accounting is measured
+        against."""
+        t0 = time.perf_counter()
+        while True:
+            if self.step():
+                continue
+            if self._pending:
+                # nothing admittable: a finishing realization frees slots
+                self._reap(block=True)
+                continue
+            break
+        with self._lock:
+            self.stats.wall_s += time.perf_counter() - t0
 
     def query(self, study: Study, tenant: str = "default",
               priority: int = 0) -> StudyResult:
@@ -337,8 +424,71 @@ class CohortQueryService:
         assert t.result is not None
         return t.result
 
+    # -- pipeline machinery --------------------------------------------------
+    def _pool(self) -> ThreadPoolExecutor:
+        if self._realizer is None:
+            self._realizer = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="svc-realize")
+        return self._realizer
+
+    def _reap(self, block: bool) -> int:
+        """Pop finished realizations off the pending deque (FIFO — the
+        single worker realizes in submission order).  ``block`` waits for
+        the oldest one.  Main-thread only."""
+        done = 0
+        while self._pending and self._pending[0][1].done():
+            self._pending.popleft()
+            done += 1
+        if block and self._pending:
+            self._pending[0][1].result()   # _realize_ticket never raises
+            self._pending.popleft()
+            done += 1
+            while self._pending and self._pending[0][1].done():
+                self._pending.popleft()
+                done += 1
+        return done
+
+    def _quiesce(self) -> None:
+        while self._pending:
+            self._reap(block=True)
+
+    def _realize_ticket(self, ticket: QueryTicket,
+                        realize: Callable[[], None]) -> None:
+        try:
+            realize()
+            with self._lock:
+                ticket.status = "done"
+                self.stats.tenant(ticket.tenant).completed += 1
+        except Exception as e:  # noqa: BLE001 — isolate tenant failures
+            with self._lock:
+                ticket.status = "failed"
+                ticket.error = e
+                self.stats.tenant(ticket.tenant).failed += 1
+                self.log.record(op=f"service:failed:{ticket.tenant}",
+                                inputs={}, outputs={},
+                                params={"error": repr(e)})
+        finally:
+            self._release_cuts(ticket)
+            self._sched.release(ticket.tenant)
+
+    def _release_cuts(self, ticket: QueryTicket) -> None:
+        """Retire the ticket's in-flight cut registrations and wake waiters
+        (who re-check the cache — on a failed realization the entry is
+        absent and the waiter becomes the computer)."""
+        evt = ticket._cut_evt
+        if evt is None:
+            return
+        with self._lock:
+            for h in ticket._cut_hashes:
+                if self._inflight_cuts.get(h) is evt:
+                    del self._inflight_cuts[h]
+        evt.set()
+
     # -- execution -----------------------------------------------------------
-    def _run_ticket(self, ticket: QueryTicket) -> None:
+    def _submit_ticket(self, ticket: QueryTicket) -> Callable[[], None]:
+        """Device-submit stage: optimize, admission analysis, normalize,
+        program + cache lookup, dispatch.  Returns the host-realize closure
+        (run by ``_realize_ticket``, possibly on the worker)."""
         t0 = time.perf_counter()
         study = ticket.study
         peng_arg = self.config.predicate_engine
@@ -356,54 +506,107 @@ class CohortQueryService:
                               n_patients=study.n_patients)
         if any(d.severity == "error" for d in diags):
             raise PlanValidationError(diags)
-        req_log = OperationLog()
         if self.mesh is not None:
-            # sharded passthrough: the mesh plan cache dedupes by structure;
-            # normalization sharing + subgraph caching are local-path only
-            from repro.distributed.pipeline import execute_plan_sharded
-
-            vals, counts, join_stats = execute_plan_sharded(
-                plan, self._env, study.n_patients, self.mesh,
-                axis_name=self.axis_name, engine=self.config.engine,
-                predicate_engine=peng_arg)
-            _executor.record_plan(plan, counts, req_log, self.config.engine,
-                                  stats=join_stats, predicate_engine=peng_arg)
+            realize_vals = self._run_sharded(ticket, study, plan)
         else:
-            vals, join_stats = self._run_local(ticket, study, plan)
-        for i, d in join_stats.items():
-            d.setdefault("stage", plan.nodes[i].label())
-        ticket.result = study._finish_result(plan, vals, join_stats, req_log)
-        ticket.latency_s = time.perf_counter() - t0
-        self.stats.queries += 1
-        self.log.record(
-            op=f"service:query:{ticket.tenant}", inputs={},
-            outputs={name: _Count(t.count)
-                     for name, t in ticket.result.events.items()},
-            params={"plan_nodes": len(plan.nodes),
-                    "cache_hits": ticket.cache_hits,
-                    "cache_misses": ticket.cache_misses,
-                    "compiled": ticket.compiled,
-                    "latency_us": round(ticket.latency_s * 1e6, 1)})
+            realize_vals = self._run_local(ticket, study, plan)
+        ticket.submit_s = time.perf_counter() - t0
+        with self._lock:
+            self.stats.submit_s += ticket.submit_s
 
-    def _run_local(self, ticket: QueryTicket, study: Study, plan: Plan):
-        """Normalize -> shared executable -> subgraph cache -> canonical
-        values mapped back to the original plan's node ids."""
-        peng = _pk.resolve_engine(self.config.predicate_engine,
-                                  self.config.engine)
-        nplan = normalize(plan)
-        if nplan.demoted:
-            # satellite of the engine-feasibility analysis (SP009): the
-            # silent pallas->jnp demotion is now auditable — logged per
-            # query and counted per tenant
-            ts = self.stats.tenant(ticket.tenant)
-            ts.demoted += len(nplan.demoted)
+        def realize() -> None:
+            t1 = time.perf_counter()
+            vals, stats_orig, req_log = realize_vals()
+            for i, d in stats_orig.items():
+                d.setdefault("stage", plan.nodes[i].label())
+            ticket.result = study._finish_result(plan, vals, stats_orig,
+                                                 req_log)
+            now = time.perf_counter()
+            ticket.realize_s = now - t1
+            ticket.latency_s = now - t0
+            with self._lock:
+                self.stats.realize_s += ticket.realize_s
+                self.stats.queries += 1
+                self.log.record(
+                    op=f"service:query:{ticket.tenant}", inputs={},
+                    outputs={name: _Count(t.count)
+                             for name, t in ticket.result.events.items()},
+                    params={"plan_nodes": len(plan.nodes),
+                            "cache_hits": ticket.cache_hits,
+                            "cache_misses": ticket.cache_misses,
+                            "compiled": ticket.compiled,
+                            "submit_us": round(ticket.submit_s * 1e6, 1),
+                            "realize_us": round(ticket.realize_s * 1e6, 1),
+                            "latency_us": round(ticket.latency_s * 1e6, 1)})
+
+        return realize
+
+    def _audit_demotions(self, ticket: QueryTicket,
+                         nplan: NormalPlan) -> None:
+        if not nplan.demoted:
+            return
+        # satellite of the engine-feasibility analysis (SP008/SP009): the
+        # silent pallas->jnp demotion is auditable — logged per query and
+        # counted per tenant.  With hoisted literals now first-class kernel
+        # operands this fires only for kernel-infeasible stamps (oversized
+        # isin whitelists, non-boolean roots).
+        with self._lock:
+            self.stats.tenant(ticket.tenant).demoted += len(nplan.demoted)
             self.stats.demotions += len(nplan.demoted)
             self.log.record(
                 op=f"service:demote:{ticket.tenant}", inputs={}, outputs={},
                 params={"nodes": list(nplan.demoted),
                         "engine": "pallas->jnp",
-                        "reason": "hoisted-literal predicates run the "
-                                  "value-generic jnp engine"})
+                        "reason": "kernel-infeasible predicate (oversized "
+                                  "isin whitelist or non-boolean root)"})
+
+    def _cut_lookup(self, prog: _Program, hashes: Dict[int, str],
+                    ticket: QueryTicket,
+                    as_payload: Callable[[_CacheEntry], Any]):
+        """Per-cut cache lookup building the injection flags/operands.
+        Misses are published in the in-flight registry; a hash another
+        ticket is currently realizing is *waited on* (outside the lock) so
+        pipelined admissions hit exactly like synchronous ones."""
+        if ticket._cut_evt is None:
+            ticket._cut_evt = threading.Event()
+        flags: Dict[int, Any] = {}
+        cut_tabs: Dict[int, Any] = {}
+        # entries pinned at lookup time: a later miss's insert may LRU-evict
+        # a hit of this very query, but its device value stays referenced
+        hit_entries: Dict[int, _CacheEntry] = {}
+        for i in prog.cut_ids:
+            h = hashes[i]
+            while True:
+                with self._lock:
+                    entry = self._cache.get(h)
+                    if entry is not None:
+                        self._cache.move_to_end(h)
+                        flags[i] = jnp.asarray(True)
+                        cut_tabs[i] = as_payload(entry)
+                        hit_entries[i] = entry
+                        break
+                    evt = self._inflight_cuts.get(h)
+                    if evt is None or evt is ticket._cut_evt:
+                        # we compute it; publish intent for later admissions
+                        self._inflight_cuts[h] = ticket._cut_evt
+                        if h not in ticket._cut_hashes:
+                            ticket._cut_hashes.append(h)
+                        flags[i] = jnp.asarray(False)
+                        cut_tabs[i] = prog.zeros[i]
+                        break
+                # an earlier ticket is realizing this subgraph: wait for its
+                # insert, then re-check (it may have failed -> we compute)
+                evt.wait()
+        return flags, cut_tabs, hit_entries
+
+    def _run_local(self, ticket: QueryTicket, study: Study, plan: Plan):
+        """Normalize -> shared executable -> subgraph cache; returns the
+        realize closure mapping canonical values back to the original
+        plan's node ids."""
+        peng = _pk.resolve_engine(self.config.predicate_engine,
+                                  self.config.engine)
+        nplan = normalize(plan)
+        self._audit_demotions(ticket, nplan)
         lits, vecs = device_params(nplan)
         env = {s: self._env[s] for s in nplan.plan.sources()}
         prog = self._program(ticket, nplan, study.n_patients, peng, env,
@@ -412,58 +615,151 @@ class CohortQueryService:
         salt = (self._version, study.n_patients, self.config.engine, peng,
                 OPTIMIZER_VERSION)
         hashes = subgraph_hashes(nplan, salt=salt)
-        flags: Dict[int, Any] = {}
-        cut_tabs: Dict[int, Any] = {}
-        # entries pinned at lookup time: a later miss's insert may LRU-evict
-        # a hit of this very query, but its device value stays referenced
-        hit_entries: Dict[int, _CacheEntry] = {}
-        for i in prog.cut_ids:
-            entry = self._cache.get(hashes[i])
-            if entry is not None:
-                self._cache.move_to_end(hashes[i])
-                flags[i] = jnp.asarray(True)
-                cut_tabs[i] = entry.value
-                hit_entries[i] = entry
-            else:
-                flags[i] = jnp.asarray(False)
-                cut_tabs[i] = prog.zeros[i]
+        flags, cut_tabs, hit_entries = self._cut_lookup(
+            prog, hashes, ticket, lambda e: e.value)
 
         keep_vals, cut_vals, stats = prog.fn(env, lits, vecs, cut_tabs, flags)
 
-        host_stats = _executor._host_stats(stats)
-        for i in prog.cut_ids:
-            if i in hit_entries:
-                ticket.cache_hits += 1
-                self.stats.cache_hits += 1
-                if hit_entries[i].stats is not None:
-                    host_stats[i] = dict(hit_entries[i].stats)
-            else:
-                ticket.cache_misses += 1
-                self.stats.cache_misses += 1
-                self._insert(hashes[i], cut_vals[i], host_stats.get(i))
+        def realize_vals():
+            host_stats = _executor._host_stats(stats)
+            with self._lock:
+                for i in prog.cut_ids:
+                    if i in hit_entries:
+                        ticket.cache_hits += 1
+                        self.stats.cache_hits += 1
+                        if hit_entries[i].stats is not None:
+                            host_stats[i] = dict(hit_entries[i].stats)
+                    else:
+                        ticket.cache_misses += 1
+                        self.stats.cache_misses += 1
+                        self._insert(hashes[i], cut_vals[i],
+                                     host_stats.get(i))
 
-        # canonical ids -> original ids (many-to-one on the canonical side)
-        vals = {}
-        stats_orig: Dict[int, Dict[str, int]] = {}
-        canon_of = nplan.orig_to_canon()
-        keep_orig = _executor.keep_ids(plan)
-        for oi in range(len(plan.nodes)):
-            ci = canon_of.get(oi)
-            if ci is None:
-                continue
-            if oi in keep_orig and ci in keep_vals:
-                vals[oi] = keep_vals[ci]
-            if ci in host_stats:
-                stats_orig[oi] = dict(host_stats[ci])
-        return vals, stats_orig
+            # canonical ids -> original ids (many-to-one, canonical side)
+            vals = {}
+            stats_orig: Dict[int, Dict[str, int]] = {}
+            canon_of = nplan.orig_to_canon()
+            keep_orig = _executor.keep_ids(plan)
+            for oi in range(len(plan.nodes)):
+                ci = canon_of.get(oi)
+                if ci is None:
+                    continue
+                if oi in keep_orig and ci in keep_vals:
+                    vals[oi] = keep_vals[ci]
+                if ci in host_stats:
+                    stats_orig[oi] = dict(host_stats[ci])
+            return vals, stats_orig, OperationLog()
+
+        return realize_vals
+
+    def _run_sharded(self, ticket: QueryTicket, study: Study, plan: Plan):
+        """The sharded twin of ``_run_local``: same normalization sharing
+        and subgraph cache, program body under ``shard_map`` (conventions
+        mirrored from ``distributed.pipeline.execute_plan_sharded``)."""
+        peng = _pk.resolve_engine(self.config.predicate_engine,
+                                  self.config.engine)
+        nplan = normalize(plan)
+        self._audit_demotions(ticket, nplan)
+        lits, vecs = device_params(nplan)
+        env = {s: self._env[s] for s in nplan.plan.sources()}
+        prog = self._program(ticket, nplan, study.n_patients, peng, env,
+                             lits, vecs)
+
+        salt = (self._version, study.n_patients, self.config.engine, peng,
+                OPTIMIZER_VERSION, self._mesh_key(), self.axis_name)
+        hashes = subgraph_hashes(nplan, salt=salt)
+        flags, cut_tabs, hit_entries = self._cut_lookup(
+            prog, hashes, ticket,
+            lambda e: (dict(e.value.columns), e.value.valid))
+
+        cols_in = {s: dict(t.columns) for s, t in env.items()}
+        valid_in = {s: t.valid for s, t in env.items()}
+        t_out, b_out, counts_vec, s_out, cut_out = prog.fn(
+            cols_in, valid_in, lits, vecs, cut_tabs, flags)
+        cplan = nplan.plan
+
+        def realize_vals():
+            counts_c = {i: int(c) for i, c in
+                        zip(_executor.traced_ids(cplan),
+                            np.asarray(counts_vec))}
+            host_stats = _executor._host_stats(s_out)
+            with self._lock:
+                for i in prog.cut_ids:
+                    if i in hit_entries:
+                        ticket.cache_hits += 1
+                        self.stats.cache_hits += 1
+                        if hit_entries[i].stats is not None:
+                            host_stats[i] = dict(hit_entries[i].stats)
+                    else:
+                        ticket.cache_misses += 1
+                        self.stats.cache_misses += 1
+                        c, v = cut_out[i]
+                        self._insert(
+                            hashes[i],
+                            ColumnarTable(c, v, jnp.int32(counts_c[i])),
+                            host_stats.get(i))
+
+            vals_c: Dict[int, Any] = {
+                i: ColumnarTable(c, v, jnp.int32(counts_c[i]))
+                for i, (c, v) in t_out.items()}
+            vals_c.update(b_out)
+            canon_of = nplan.orig_to_canon()
+            vals: Dict[int, Any] = {}
+            counts: Dict[int, int] = {}
+            stats_orig: Dict[int, Dict[str, int]] = {}
+            for oi in range(len(plan.nodes)):
+                ci = canon_of.get(oi)
+                if ci is None:
+                    continue
+                if ci in vals_c:
+                    vals[oi] = vals_c[ci]
+                if ci in counts_c:
+                    counts[oi] = counts_c[ci]
+                if ci in host_stats:
+                    stats_orig[oi] = dict(host_stats[ci])
+            req_log = OperationLog()
+            _executor.record_plan(
+                plan, counts, req_log, self.config.engine, stats=stats_orig,
+                predicate_engine=self.config.predicate_engine)
+            return vals, stats_orig, req_log
+
+        return realize_vals
+
+    # -- compiled shape programs --------------------------------------------
+    def _mesh_key(self) -> Tuple:
+        m = self.mesh
+        return (tuple(m.axis_names),
+                tuple(m.shape[a] for a in m.axis_names),
+                tuple(d.id for d in np.ravel(m.devices)))
 
     def _program(self, ticket: QueryTicket, nplan: NormalPlan,
                  n_patients: int, peng: str, env, lits, vecs) -> _Program:
         skey = (nplan.plan.key(), n_patients, self.config.engine, peng,
                 params_signature(lits, vecs))
+        if self.mesh is not None:
+            skey += (self._mesh_key(), self.axis_name)
         prog = self._programs.get(skey)
         if prog is not None:
             return prog
+        if self.mesh is not None:
+            prog = self._build_sharded_program(nplan, n_patients, peng, env,
+                                               lits, vecs)
+        else:
+            prog = self._build_local_program(nplan, n_patients, peng, env,
+                                             lits, vecs)
+        self._programs[skey] = prog
+        with self._lock:
+            self.stats.compile_count += 1
+            ticket.compiled = True
+            self.log.record(op="service:compile", inputs={}, outputs={},
+                            params={"plan_nodes": len(nplan.plan.nodes),
+                                    "cut_points": len(prog.cut_ids),
+                                    "sharded": self.mesh is not None,
+                                    "executables": self.stats.compile_count})
+        return prog
+
+    def _build_local_program(self, nplan: NormalPlan, n_patients: int,
+                             peng: str, env, lits, vecs) -> _Program:
         plan = nplan.plan
         engine = self.config.engine
         cut_ids = cut_points(plan)
@@ -518,24 +814,147 @@ class CohortQueryService:
                         {i: vals[i] for i in cut_ids},
                         stats)
 
-        prog = _Program(fn=jax.jit(body), cut_ids=cut_ids,
+        return _Program(fn=jax.jit(body), cut_ids=cut_ids,
                         zeros={i: _zeros_like_struct(struct[i][0])
                                for i in cut_ids})
-        self._programs[skey] = prog
-        self.stats.compile_count += 1
-        ticket.compiled = True
-        self.log.record(op="service:compile", inputs={}, outputs={},
-                        params={"plan_nodes": len(plan.nodes),
-                                "cut_points": len(cut_ids),
-                                "executables": self.stats.compile_count})
-        return prog
+
+    def _build_sharded_program(self, nplan: NormalPlan, n_patients: int,
+                               peng: str, env, lits, vecs) -> _Program:
+        """Compile the normalized plan as ONE shard_map body with the
+        lax.cond cache injection inside.  Export conventions mirror
+        ``execute_plan_sharded``: tables cross the boundary as
+        ``(columns, valid)`` tuples under ``P(axis)``, cohort bitsets /
+        stacked counts / join stats psum out replicated.  Injection-eligible
+        cut nodes are those whose shard-local capacity is 32-aligned (the
+        cached global words then split on shard row boundaries); the rest
+        compute in place, uncached."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.bitset import count as _bits_count
+        from repro.distributed.pipeline import compat_shard_map
+
+        plan = nplan.plan
+        mesh, axis = self.mesh, self.axis_name
+        n = mesh.shape[axis]
+        engine = self.config.engine
+        out_ids = {i for _, i in plan.outputs}
+        table_ids = tuple(i for i in sorted(out_ids)
+                          if plan.nodes[i].op in TABLE_OPS)
+        cohort_ids = tuple(i for i, nd in enumerate(plan.nodes)
+                           if nd.op == "cohort_from_events"
+                           or (nd.op in COHORT_OPS and i in out_ids))
+        ev_ids = tuple(sorted(set(table_ids) | {
+            nd.inputs[0] for nd in plan.nodes
+            if nd.op == "cohort_from_events"}))
+        candidates = cut_points(plan)
+        traced = _executor.traced_ids(plan)
+        cols_in = {s: dict(t.columns) for s, t in env.items()}
+        valid_in = {s: t.valid for s, t in env.items()}
+
+        def _aligned(t):
+            # 32-align the local capacity so the shard-concatenated
+            # validity words stay row-exact on the host side
+            cap = -(-t.capacity // 32) * 32
+            return t if cap == t.capacity else t.pad_to(cap)
+
+        def probe(cols, valids, lits, vecs):
+            local = {s: ColumnarTable(c, valids[s], _bits_count(valids[s]))
+                     for s, c in cols.items()}
+            with bound_params(lits, vecs):
+                vals, _, stats = _executor.run_plan_body(
+                    plan, local, n_patients, engine, axis_name=axis,
+                    n_shards=n, predicate_engine=peng)
+            return ({i: (dict(vals[i].columns), vals[i].valid)
+                     for i in candidates},
+                    {i: vals[i].count for i in candidates},
+                    {i: stats.get(i) for i in candidates})
+
+        probe_fn = compat_shard_map(
+            probe, mesh,
+            in_specs=(P(axis), P(axis), P(), P()),
+            out_specs=(P(axis), P(), P()))
+        cut_struct, cnt_struct, stats_struct = jax.eval_shape(
+            probe_fn, cols_in, valid_in, lits, vecs)
+
+        def _eligible(i) -> bool:
+            cs, valid = cut_struct[i]
+            if not cs:
+                return False       # no column to read the capacity from
+            rows = next(iter(cs.values())).shape[0]
+            return (rows // n) % 32 == 0 and valid.shape[0] * 32 == rows
+
+        cut_ids = tuple(i for i in candidates if _eligible(i))
+        cut_set = frozenset(cut_ids)
+        zeros = {i: _zeros_like_struct(cut_struct[i]) for i in cut_ids}
+
+        def body(cols, valids, lits, vecs, cut_tabs, flags):
+            local = {s: ColumnarTable(c, valids[s], _bits_count(valids[s]))
+                     for s, c in cols.items()}
+            with bound_params(lits, vecs):
+                vals: Dict[int, Any] = {}
+                counts: Dict[int, Any] = {}
+                stats: Dict[int, Any] = {}
+                for i in traced:
+                    node = plan.nodes[i]
+                    ins = [vals[j] for j in node.inputs]
+                    if i in cut_set:
+                        def _compute(node=node, ins=ins):
+                            out = _executor._eval_node(
+                                node, ins, local, n_patients, engine, axis,
+                                n, predicate_engine=peng)
+                            if node.op in STATS_OPS:
+                                return out
+                            return (out, None)
+
+                        def _cached(i=i):
+                            c, v = cut_tabs[i]
+                            cnt = _bits_count(v).astype(cnt_struct[i].dtype)
+                            st = stats_struct[i]
+                            return (ColumnarTable(c, v, cnt),
+                                    None if st is None
+                                    else _zeros_like_struct(st))
+
+                        out, st = jax.lax.cond(flags[i], _cached, _compute)
+                        if st is not None:
+                            stats[i] = st
+                    else:
+                        out = _executor._eval_node(
+                            node, ins, local, n_patients, engine, axis, n,
+                            predicate_engine=peng)
+                        if node.op in STATS_OPS:
+                            out, stats[i] = out
+                    vals[i] = out
+                    counts[i] = _executor._node_count(node, out)
+            t_out = {}
+            for i in ev_ids:
+                t = _aligned(vals[i])
+                t_out[i] = (dict(t.columns), t.valid)
+            # eligible cuts are already 32-aligned: export as computed
+            cut_out = {i: (dict(vals[i].columns), vals[i].valid)
+                       for i in cut_ids}
+            b_out = {i: jax.lax.psum(vals[i], axis) for i in cohort_ids}
+            ids = tuple(sorted(counts))
+            c_out = jax.lax.psum(jnp.stack([counts[i] for i in ids]), axis)
+            s_out = jax.lax.psum(stats, axis) if stats else {}
+            return t_out, b_out, c_out, s_out, cut_out
+
+        fn = jax.jit(compat_shard_map(
+            body, mesh,
+            in_specs=(P(axis), P(axis), P(), P(), P(axis), P()),
+            out_specs=(P(axis), P(), P(), P(), P(axis))))
+        return _Program(fn=fn, cut_ids=cut_ids, zeros=zeros)
 
     # -- subgraph cache ------------------------------------------------------
     def _insert(self, h: str, value: Any,
                 stats: Optional[Dict[str, int]]) -> None:
+        """Insert under the service lock (callers hold it).  Idempotent: a
+        duplicate hash replaces the old entry without double-counting."""
         nbytes = _table_nbytes(value)
         if nbytes > self.config.cache_budget_bytes:
             return                      # larger than the whole budget: skip
+        old = self._cache.pop(h, None)
+        if old is not None:
+            self._cache_bytes -= old.nbytes
         self._cache[h] = _CacheEntry(value=value, stats=stats, nbytes=nbytes)
         self._cache_bytes += nbytes
         while self._cache_bytes > self.config.cache_budget_bytes:

@@ -167,26 +167,45 @@ def test_study_check_clean(dcir):
 
 
 # ---------------------------------------------------------------------------
-# normalize() demotion audit (the silent pallas->jnp bugfix)
+# normalize() demotion audit: hoisted literals are kernel operands now, so
+# demotion is the *exception* (kernel-infeasible stamps only)
 # ---------------------------------------------------------------------------
-def test_normalize_records_demotions():
+def test_normalize_keeps_hoisted_literals_on_pallas():
     b = PlanBuilder()
     t = b.scan("T")
     m = b.predicate(t, col("x") > 5)          # inline literal -> hoisted
     b.set_output("out", b.compact(m))
     plan = assign_engines(b.build(), predicate_engine="pallas")
     nplan = normalize(plan)
-    assert nplan.demoted, "hoisted-literal pallas node not recorded"
-    for nid in nplan.demoted:
-        node = nplan.plan.nodes[nid]
-        assert node.get("engine") == "jnp"
-    # literal-free predicates stay pallas and record nothing
+    assert nplan.demoted == (), \
+        "hoisted-literal pallas predicates must keep the kernel engine"
+    pred = [n for n in nplan.plan.nodes if n.op == "predicate"]
+    assert pred and all(n.get("engine") == "pallas" for n in pred)
+    # literal-free predicates stay pallas and record nothing either
     b2 = PlanBuilder()
     t2 = b2.scan("T")
     m2 = b2.predicate(t2, col("x").not_null())
     b2.set_output("out", b2.compact(m2))
     n2 = normalize(assign_engines(b2.build(), predicate_engine="pallas"))
     assert n2.demoted == ()
+
+
+def test_normalize_demotes_kernel_infeasible_stamp():
+    # force-stamp pallas onto an isin past the VMEM operand budget (the
+    # optimizer itself would stamp jnp) — the one case that still demotes
+    from repro.kernels.predicate import MAX_ISIN_VALUES
+    from repro.study.expr import as_param
+
+    b = PlanBuilder()
+    t = b.scan("T")
+    m = b.add("predicate", (t,),
+              expr=as_param(col("x").isin(range(MAX_ISIN_VALUES + 1))),
+              engine="pallas", bitset_block=1024, bitset_word="uint32")
+    b.set_output("out", b.compact(m))
+    nplan = normalize(b.build())
+    assert nplan.demoted, "oversized-whitelist pallas stamp must demote"
+    for nid in nplan.demoted:
+        assert nplan.plan.nodes[nid].get("engine") == "jnp"
 
 
 # ---------------------------------------------------------------------------
@@ -211,18 +230,21 @@ def test_service_rejects_error_plan_before_compile(dcir):
     assert svc.stats.compile_count >= 1
 
 
-def test_service_counts_pallas_demotions(dcir):
+def test_service_serves_pallas_without_demotions(dcir):
+    # no-demotion regression: hoisted literals ride as kernel operands, so
+    # a pallas-engine service keeps every predicate on the kernel path and
+    # the demotion audit stays silent
     svc = CohortQueryService(
         dict(dcir), config=ServiceConfig(predicate_engine="pallas"))
     t = svc.submit(_good_study(CFG.n_patients), tenant="a")
     svc.drain()
-    assert t.status == "done"
-    assert svc.stats.demotions > 0
-    assert svc.stats.tenant("a").demoted > 0
-    entries = [e for e in svc.log.entries if e["op"] == "service:demote:a"]
-    assert entries and entries[0]["params"]["engine"] == "pallas->jnp"
+    assert t.status == "done", t.error
+    assert svc.stats.demotions == 0
+    assert svc.stats.tenant("a").demoted == 0
+    assert not [e for e in svc.log.entries
+                if e["op"].startswith("service:demote:")]
     snap = svc.stats.snapshot()
-    assert snap["demotions"] == svc.stats.demotions
+    assert snap["demotions"] == 0
     assert snap["plans_rejected"] == 0
 
 

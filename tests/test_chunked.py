@@ -3,6 +3,7 @@ resident parity (deterministic battery + hypothesis property over random
 plans × chunk sizes), ONE-compile pinning, kill-and-resume, the chunk-unsafe
 op guard, SP015, and the shared sharded jit cache."""
 import json
+import warnings
 import os
 
 import jax
@@ -150,7 +151,8 @@ def test_mmap_mode_compressed_fallback(star, tmp_path):
     t = star["IR_BEN"]
     p = str(tmp_path / "t.npz")
     save_columnar(t, p, compressed=True)
-    cols, valid = load_columnar_arrays(p, mmap_mode="r")   # degrades eagerly
+    with pytest.warns(RuntimeWarning, match="cannot be memory-mapped"):
+        cols, valid = load_columnar_arrays(p, mmap_mode="r")  # degrades eagerly
     assert not any(isinstance(v, np.memmap) for v in cols.values())
     np.testing.assert_array_equal(cols["patient_id"],
                                   np.asarray(t.columns["patient_id"]))
@@ -361,3 +363,67 @@ def test_property_chunked_parity(tmp_path_factory, seed, cap_words, op):
                            chunk_capacity=32 * cap_words)
     chk = build().run_chunked(store)
     _assert_bit_identical(res, chk)
+
+
+def test_resume_tolerates_torn_journal_tail(star, tmp_path):
+    """A kill mid-append leaves a torn final journal line; resume must keep
+    every completed line before it (one-chunk cost, not a full restart)."""
+    store = partition_star(star, str(tmp_path / "store"), source="ER_PRS",
+                           chunk_capacity=96)
+    ck = str(tmp_path / "ckpt")
+    res = _study().run_chunked(store, checkpoint_dir=ck)
+    jp = os.path.join(ck, "journal.jsonl")
+    n_done = sum(1 for ln in open(jp) if '"chunk"' in ln)
+    assert n_done == store.n_chunks
+
+    # tear the last line mid-record (no trailing newline, invalid JSON)
+    with open(jp, "rb") as f:
+        raw = f.read()
+    torn = raw.rstrip(b"\n")[:-7]
+    with open(jp, "wb") as f:
+        f.write(torn)
+    rep = {}
+    out = _study().run_chunked(store, checkpoint_dir=ck, report_sink=rep)
+    assert rep["resumed"] == store.n_chunks - 1, \
+        "a torn tail must cost exactly the one uncommitted chunk"
+    assert rep["executed"] == 1
+    _assert_bit_identical(res, out)
+
+    # garbage appended after valid lines: the valid prefix still resumes
+    with open(jp, "ab") as f:
+        f.write(b'{"kind": "chu')
+    rep2 = {}
+    out2 = _study().run_chunked(store, checkpoint_dir=ck, report_sink=rep2)
+    assert rep2["resumed"] == store.n_chunks
+    assert rep2["executed"] == 0
+    _assert_bit_identical(res, out2)
+
+
+def test_mmap_degrade_is_surfaced(star, tmp_path):
+    """Compressed members silently degraded to eager reads before; now the
+    per-member ``mapped_sink`` flags and a once-per-file RuntimeWarning
+    surface it."""
+    t = star["IR_BEN"]
+    raw = str(tmp_path / "raw.npz")
+    packed = str(tmp_path / "packed.npz")
+    save_columnar(t, raw, compressed=False)
+    save_columnar(t, packed, compressed=True)
+
+    flags = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # mapped loads must not warn
+        load_columnar_arrays(raw, mmap_mode="r", mapped_sink=flags)
+    assert flags and all(flags.values())
+    assert "__valid__" in flags and "patient_id" in flags
+
+    flags = {}
+    with pytest.warns(RuntimeWarning, match="cannot be memory-mapped"):
+        load_columnar_arrays(packed, mmap_mode="r", mapped_sink=flags)
+    assert flags and not any(flags.values())
+
+    # eager loads (no mmap requested): no warning, flags all False
+    flags = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        load_columnar_arrays(packed, mapped_sink=flags)
+    assert flags and not any(flags.values())

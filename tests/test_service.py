@@ -222,3 +222,107 @@ def test_service_queue_rejection_and_stats(dcir):
     t3 = svc.submit(s, tenant="c")
     svc.drain()
     assert t3.status == "done"
+
+
+def test_slot_scheduler_fifo_with_non_comparable_items():
+    """Heap entries must never fall through to comparing the items
+    themselves: dicts are not orderable, so equal-priority ties break on
+    the sequence counter alone (FIFO within a priority band)."""
+    sched = SlotScheduler(4)
+    items = [{"q": i} for i in range(4)]          # dict: no __lt__
+    for it in items:
+        sched.submit(it, key="a", priority=3)     # all ties
+    assert [x for x, _ in sched.admit()] == items
+
+
+# ---------------------------------------------------------------------------
+# async pipeline: overlap, slot release on realization, hit parity
+# ---------------------------------------------------------------------------
+def test_service_async_pipeline_multi_tenant_stress(dcir):
+    """N tenants x mixed shapes through the pipelined service: every
+    ticket resolves bit-identical to a solo ``Study.run``, and the stage
+    accounting shows realization actually overlapped device submission."""
+    env = dict(dcir)
+    svc = CohortQueryService(env, config=ServiceConfig(pipeline=True,
+                                                       n_slots=4))
+    jobs = []
+    for q in range(9):
+        tenant = f"t{q % 3}"
+        if q % 3 == 2:
+            study = _other_shape(list(range(60 + q, 100 + q)))
+        else:
+            study = _study(40 + q, list(range(100 + q, 140 + q)))
+        jobs.append((tenant, study))
+    tickets = [svc.submit(s, tenant=t) for t, s in jobs]
+    svc.drain()
+    assert svc._sched.inflight() == 0, \
+        "slots must release when realization finishes"
+    assert not svc._pending and not svc._inflight_cuts
+    for (tenant, study), ticket in zip(jobs, tickets):
+        assert ticket.status == "done", (tenant, ticket.error)
+        assert ticket.submit_s > 0 and ticket.realize_s > 0
+        _assert_same_result(study.run(env), ticket.result)
+    assert svc.stats.compile_count == 2           # 2 shapes, 9 queries
+    snap = svc.stats.snapshot()
+    assert snap["queries"] == 9
+    assert snap["wall_s"] > 0
+    assert snap["overlap_s"] > 0, \
+        "pipelined drain must overlap realize with the next submit"
+
+
+def test_service_pipelined_repeat_hits_within_one_drain(dcir):
+    """A repeat query admitted while the first copy is still realizing must
+    wait for its cache insert and then hit — pipelined hit/miss accounting
+    matches the synchronous mode exactly."""
+    svc = CohortQueryService(dict(dcir),
+                             config=ServiceConfig(pipeline=True))
+    t1 = svc.submit(_study(100, CODES_A), tenant="a")
+    t2 = svc.submit(_study(100, CODES_A), tenant="b")
+    svc.drain()
+    assert t1.status == "done" and t2.status == "done"
+    assert t1.cache_misses > 0 and t1.cache_hits == 0
+    assert t2.cache_misses == 0 and t2.cache_hits == t1.cache_misses
+    assert not t2.compiled
+    _assert_same_result(t1.result, t2.result)
+
+
+def test_service_sync_mode_parity_with_pipeline(dcir):
+    env = dict(dcir)
+    results = {}
+    for pipeline in (False, True):
+        svc = CohortQueryService(env, config=ServiceConfig(
+            pipeline=pipeline))
+        tickets = [svc.submit(_study(100, CODES_A), tenant="a"),
+                   svc.submit(_study(500, CODES_B), tenant="b")]
+        svc.drain()
+        assert all(t.status == "done" for t in tickets)
+        results[pipeline] = [t.result for t in tickets]
+        assert svc.stats.cache_misses > 0
+    for a, b in zip(results[False], results[True]):
+        _assert_same_result(a, b)
+
+
+# ---------------------------------------------------------------------------
+# sharded path: normalization sharing + subgraph cache under shard_map
+# ---------------------------------------------------------------------------
+def test_service_sharded_normalized_cache_parity(dcir):
+    import jax
+    from jax.sharding import Mesh
+
+    env = dict(dcir)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    svc = CohortQueryService(env, mesh=mesh, config=ServiceConfig())
+    jobs = [("a", _study(100, CODES_A)), ("b", _study(500, CODES_B)),
+            ("c", _study(100, CODES_A)),          # repeat -> full hit
+            ("a", _other_shape(CODES_B))]
+    tickets = [svc.submit(s, tenant=t) for t, s in jobs]
+    svc.drain()
+    for (tenant, study), ticket in zip(jobs, tickets):
+        assert ticket.status == "done", (tenant, ticket.error)
+        _assert_same_result(study.run(env), ticket.result)
+    # sharded path compiles once per normalized shape, like the local path
+    assert svc.stats.compile_count == 2
+    assert svc.stats.cache_hits > 0
+    assert tickets[2].cache_misses == 0 \
+        and tickets[2].cache_hits == tickets[0].cache_misses
+    assert svc.stats.demotions == 0
