@@ -338,6 +338,50 @@ def bench_analyze() -> None:
             f"analyze.defects: seeded defects not detected: {missed}")
 
 
+def bench_spec(n: int = 24, n_patients: int = 300) -> None:
+    """Declarative-front-end gate: a fixed-seed fuzz corpus must show 100%
+    parity (every valid spec executes identically under jnp, pallas and the
+    chunked path, emptiness verdicts cross-checked) and 100% rejection
+    (every catalog mutation refused with its exact SPEC code); the golden
+    wire specs must round-trip onto the golden plans under both engines.
+    Emits ``BENCH_spec.json``."""
+    import json
+    import time
+
+    from repro.study.defects import golden_studies
+    from repro.study.fuzz import run_corpus
+    from repro.study.spec import compile_spec, spec_from_study
+
+    t0 = time.perf_counter()
+    for name, study in golden_studies().items():
+        rebuilt = compile_spec(spec_from_study(study))
+        for engine in ("pallas", "jnp"):
+            if (rebuilt.optimized_plan(predicate_engine=engine).key()
+                    != study.optimized_plan(predicate_engine=engine).key()):
+                raise SystemExit(
+                    f"spec.roundtrip.{name}.{engine}: wire spec does not "
+                    f"rebuild the golden plan")
+    _emit("spec.roundtrip", (time.perf_counter() - t0) * 1e6,
+          f"goldens={len(golden_studies())} engines=2")
+
+    t0 = time.perf_counter()
+    report = run_corpus(n=n, seed=0, n_patients=n_patients)
+    dt = time.perf_counter() - t0
+    with open("BENCH_spec.json", "w") as f:
+        json.dump(dict(report.to_json(), elapsed_s=round(dt, 2)), f, indent=2)
+    _emit("spec.fuzz", dt * 1e6 / max(1, n),
+          f"n={report.n} valid={report.n_valid} mutated={report.n_mutated} "
+          f"sp003={report.n_sp003} sp014={report.n_sp014} "
+          f"gated={report.n_chunk_gated} failures={len(report.failures)}")
+    if not report.ok:
+        raise SystemExit("spec.fuzz: differential corpus failed:\n"
+                         + report.summary())
+    if report.n_valid + report.n_mutated != n:
+        raise SystemExit(
+            f"spec.fuzz: only {report.n_valid}+{report.n_mutated} of {n} "
+            f"specs reached a verdict")
+
+
 def bench_study(n_patients: int = 2_000, repeats: int = 8) -> None:
     from benchmarks import study_plan_bench
 
@@ -384,6 +428,7 @@ def main() -> None:
         bench_serving(n_patients=500)
         bench_chunked(n_patients=500, repeats=2)
         bench_analyze()
+        bench_spec(n=24, n_patients=300)
         return
     bench_table1()
     bench_flattening()
@@ -396,6 +441,7 @@ def main() -> None:
     bench_serving()
     bench_chunked()
     bench_analyze()
+    bench_spec()
     bench_roofline()
 
 

@@ -22,7 +22,7 @@ predicate semantics, reported as stable-coded ``Diagnostic``s; surfaced via
 from repro.study.plan import Node, Plan, PlanBuilder
 from repro.study.expr import (
     Expr, col, lit, all_of, any_of, expr_from_param, fused_predicate,
-    node_predicate, parse_cohort_expr,
+    node_predicate, parse_cohort_expr, CohortParseError,
 )
 from repro.study.optimizer import (
     optimize, merge_projections, fuse_masks, defer_compaction,
@@ -45,6 +45,10 @@ from repro.study.analyze import (
     Diagnostic, DIAGNOSTIC_CODES, PlanValidationError, analyze,
 )
 from repro.study.chunked import ChunkedExecutor, ChunkedReport
+from repro.study.spec import (
+    SPEC_CODES, SpecIssue, SpecValidationError, compile_spec, error_payload,
+    spec_from_study, validate_spec,
+)
 
 __all__ = [
     "Node", "Plan", "PlanBuilder",
@@ -62,4 +66,6 @@ __all__ = [
     "QueryTicket",
     "Diagnostic", "DIAGNOSTIC_CODES", "PlanValidationError", "analyze",
     "ChunkedExecutor", "ChunkedReport",
+    "CohortParseError", "SPEC_CODES", "SpecIssue", "SpecValidationError",
+    "compile_spec", "error_payload", "spec_from_study", "validate_spec",
 ]

@@ -27,7 +27,13 @@ scan).  The pieces:
   modular); chunk-independent branches (resident dimension lineage) are
   taken from one chunk instead of summed N times; interior cohort-algebra
   counts are replayed host-side over the merged words so provenance is
-  exact, not a sum of per-chunk popcounts.
+  exact, not a sum of per-chunk popcounts.  Plan-level ``concat`` outputs
+  get a *branch-aware* merge: the resident path emits [branch1; branch2]
+  while each chunk emits its own [branch1_ci; branch2_ci], so naive
+  chunk-order concatenation would interleave the branches — instead each
+  chunk's concat table is sliced back into its branch windows (boundaries
+  read off ``jax.eval_shape`` of the plan body; capacities are 32-row
+  aligned so validity slices word-wise) and reassembled branch-major.
 * **Checkpoint journal.**  With ``checkpoint_dir`` set, each completed
   chunk spills its kept values via ``data/io.py`` and appends a journal
   line (fsync'd); a killed run re-opens the journal, verifies the plan/
@@ -108,6 +114,84 @@ def chunk_unsafe_ops(plan: Plan, source: str) -> List[Tuple[int, str]]:
     dep = chunk_dependent_ids(plan, source)
     return [(i, plan.nodes[i].op) for i in sorted(dep)
             if plan.nodes[i].op in CHUNK_UNSAFE_OPS]
+
+
+def _unwrap_compacted_concats(plan: Plan, dep: Set[int]) -> Plan:
+    """Retarget named outputs that are compact wrappers over chunk-dependent
+    concats at the concat node itself.  Each chunk's compact squeezes ITS
+    OWN branch rows together, so the dense layout's branch boundaries are
+    dynamic and the merge could not slice branches back apart; the raw
+    concat's branch windows are static (trace-time capacities) and its
+    valid-row contents are identical — compaction only drops padding."""
+    new_out = []
+    changed = False
+    for name, nid in plan.outputs:
+        tgt = nid
+        while plan.nodes[tgt].op == "compact":
+            tgt = plan.nodes[tgt].inputs[0]
+        if (tgt != nid and tgt in dep and plan.nodes[tgt].op == "concat"
+                and len(plan.nodes[tgt].inputs) > 1):
+            new_out.append((name, tgt))
+            changed = True
+        else:
+            new_out.append((name, nid))
+    return dataclasses.replace(plan, outputs=tuple(new_out)) if changed \
+        else plan
+
+
+def _concat_probe_ids(plan: Plan, nid: int, dep: Set[int]) -> Set[int]:
+    """Node ids whose padded row counts the branch-aware concat merge needs:
+    every input reachable through nested chunk-dependent concats."""
+    out: Set[int] = set()
+    stack = [nid]
+    while stack:
+        for k in plan.nodes[stack.pop()].inputs:
+            out.add(k)
+            if plan.nodes[k].op == "concat" and k in dep:
+                stack.append(k)
+    return out
+
+
+def _padded_rows(plan: Plan, env: Dict[str, ColumnarTable], n_patients: int,
+                 engine: str, predicate_engine: Optional[str],
+                 nids: List[int]) -> Dict[int, int]:
+    """Padded (capacity) row counts of table nodes ``nids`` under the
+    per-chunk env — shapes only, via ``jax.eval_shape``: no FLOPs, no
+    transfers, and identical for every chunk (one executable ⇒ pytree-
+    identical shapes)."""
+    def body(e):
+        vals, _, _ = _executor.run_plan_body(
+            plan, e, n_patients, engine, predicate_engine=predicate_engine)
+        return {i: vals[i].valid for i in nids}
+    words = jax.eval_shape(body, env)
+    return {i: int(w.shape[0]) * 32 for i, w in words.items()}
+
+
+def _concat_windows(plan: Plan, nid: int, dep: Set[int],
+                    rows_of: Dict[int, int], off: int = 0
+                    ) -> List[Tuple[int, int, int]]:
+    """Resident-ordered ``(node, start, stop)`` padded-row windows of a
+    concat node's branches inside its per-chunk output table, recursing
+    through nested chunk-dependent concats so a concat-of-concats flattens
+    to the same leaf order the resident path materializes."""
+    out: List[Tuple[int, int, int]] = []
+    for k in plan.nodes[nid].inputs:
+        if plan.nodes[k].op == "concat" and k in dep:
+            out.extend(_concat_windows(plan, k, dep, rows_of, off))
+        else:
+            out.append((k, off, off + rows_of[k]))
+        off += rows_of[k]
+    return out
+
+
+def _slice_rows(t: ColumnarTable, a: int, b: int) -> ColumnarTable:
+    """Padded-row window [a, b) of a table.  Capacities are 32-row aligned
+    end to end, so the validity bitset slices word-wise — no repacking."""
+    if a % 32 or b % 32:
+        raise RuntimeError(
+            f"concat branch window [{a}, {b}) is not 32-row aligned")
+    cols = {c: v[a:b] for c, v in t.columns.items()}
+    return ColumnarTable.from_columns(cols, valid=t.valid[a // 32: b // 32])
 
 
 def _merge_capacity_plans(plans: List[Plan]) -> Plan:
@@ -423,10 +507,11 @@ class ChunkedExecutor:
         store.validate()
         resident = self._resident_env(study, tables)
         plan = self._plan(study, resident)
+        dep = chunk_dependent_ids(plan, store.source)
+        plan = _unwrap_compacted_concats(plan, dep)
         chunk0 = store.chunk_table(0)
         self._preflight(study, plan, self._chunk_env(resident, chunk0))
 
-        dep = chunk_dependent_ids(plan, store.source)
         keep = _executor.keep_ids(plan)
         cohort_keep = [i for i in keep
                        if plan.nodes[i].op in ("cohort_from_events",
@@ -536,7 +621,37 @@ class ChunkedExecutor:
 
         # -- merge into one StudyResult -------------------------------------
         merged_vals: Dict[int, Any] = dict(indep_vals)
+        # branch-aware concat merge: chunk order would interleave the
+        # branches the resident path lays out branch-major (module docstring)
+        windows: Dict[int, List[Tuple[int, int, int]]] = {}
+        concat_ids = [nid for nid in dep_tables
+                      if plan.nodes[nid].op == "concat"
+                      and len(plan.nodes[nid].inputs) > 1]
+        if concat_ids:
+            probe: Set[int] = set()
+            for nid in concat_ids:
+                probe.update(_concat_probe_ids(plan, nid, dep))
+            rows_of = _padded_rows(
+                plan, self._chunk_env(resident, chunk0), study.n_patients,
+                self.engine, self.predicate_engine, sorted(probe))
+            for nid in concat_ids:
+                windows[nid] = _concat_windows(plan, nid, dep, rows_of)
         for nid, by_chunk in dep_tables.items():
+            if nid in windows:
+                cis = sorted(by_chunk)
+                parts = []
+                for k, a, b in windows[nid]:
+                    # chunk-independent branches are identical every chunk —
+                    # take the window once, not once per chunk
+                    for ci in (cis if k in dep else cis[:1]):
+                        parts.append(_slice_rows(by_chunk[ci], a, b))
+                t = parts[0] if len(parts) == 1 else ColumnarTable.concat(parts)
+                merged_vals[nid] = t
+                # the per-chunk count sum double-counts chunk-independent
+                # branches; the merged popcount is exact either way
+                counts_dep[nid] = int(
+                    np.bitwise_count(np.asarray(t.valid)).sum())
+                continue
             parts = [by_chunk[ci] for ci in sorted(by_chunk)]
             merged_vals[nid] = (parts[0] if len(parts) == 1
                                 else ColumnarTable.concat(parts))

@@ -54,7 +54,7 @@ __all__ = [
     "expr_from_param", "fused_predicate", "node_predicate",
     "param_conjuncts", "const_fold_param",
     "HoistedLit", "HoistedIsIn", "bound_params", "current_bound_params",
-    "CohortRef", "CohortCombine", "parse_cohort_expr",
+    "CohortRef", "CohortCombine", "CohortParseError", "parse_cohort_expr",
 ]
 
 
@@ -699,24 +699,47 @@ class CohortCombine:
     right: Union["CohortRef", "CohortCombine"]
 
 
+class CohortParseError(ValueError):
+    """A cohort-algebra syntax error with character position.
+
+    ``offset`` is the 0-based character offset of the offending token in the
+    submitted string (the string's end for truncated expressions); the
+    message carries a caret snippet so wire-level errors (``SPEC-012``) point
+    at the exact character.  Subclasses ``ValueError`` so every pre-existing
+    caller's ``except ValueError`` keeps working."""
+
+    def __init__(self, reason: str, expr: str, offset: int) -> None:
+        self.reason = reason
+        self.expr_text = expr
+        self.offset = int(offset)
+        caret = "\n  " + expr + "\n  " + " " * self.offset + "^"
+        super().__init__(
+            f"{reason} at offset {self.offset} in cohort expression{caret}")
+
+
 def _tokenize_cohort(expr: str):
     """Whitespace-first tokenizer with paren peeling.  Operand names keep
     every non-paren character (so legacy names like ``drug_purchases[cip13]``
     or hyphenated names survive); operators must be whitespace-separated,
-    exactly as in the historical flat grammar; parentheses may abut names."""
+    exactly as in the historical flat grammar; parentheses may abut names.
+    Returns ``(token, offset)`` pairs — offsets index into ``expr`` so parse
+    errors can point at the offending character."""
     toks = []
+    k = 0
     for raw in expr.split():
+        k = expr.index(raw, k)                   # offset of this word
         i, j = 0, len(raw)
         while i < j and raw[i] == "(":
-            toks.append("(")
+            toks.append(("(", k + i))
             i += 1
-        trail = 0
+        trail = []
         while j > i and raw[j - 1] == ")":
-            trail += 1
             j -= 1
+            trail.append((")", k + j))
         if i < j:
-            toks.append(raw[i:j])
-        toks.extend(")" for _ in range(trail))
+            toks.append((raw[i:j], k + i))
+        toks.extend(reversed(trail))
+        k += len(raw)
     return toks
 
 
@@ -731,14 +754,21 @@ def parse_cohort_expr(expr: str) -> Union[CohortRef, CohortCombine]:
         expr := term (("|" | "-") term)*
         term := atom ("&" atom)*
         atom := NAME | "(" expr ")"
+
+    Syntax errors raise ``CohortParseError`` (a ``ValueError``) carrying the
+    character offset and a caret snippet.
     """
     toks = _tokenize_cohort(expr)
+    end = len(expr)
     if not toks:
-        raise ValueError(f"malformed cohort expression {expr!r}")
+        raise CohortParseError("empty cohort expression", expr, 0)
     pos = [0]
 
     def peek():
-        return toks[pos[0]] if pos[0] < len(toks) else None
+        return toks[pos[0]][0] if pos[0] < len(toks) else None
+
+    def here():
+        return toks[pos[0]][1] if pos[0] < len(toks) else end
 
     def take():
         t = peek()
@@ -746,14 +776,17 @@ def parse_cohort_expr(expr: str) -> Union[CohortRef, CohortCombine]:
         return t
 
     def parse_atom():
+        at = here()
         t = take()
         if t == "(":
             node = parse_union()
-            if take() != ")":
-                raise ValueError(f"unbalanced parentheses in {expr!r}")
+            if peek() != ")":
+                raise CohortParseError("unbalanced parentheses", expr, here())
+            take()
             return node
         if t is None or t in ("&", "|", "-", ")"):
-            raise ValueError(f"expected cohort name, got {t!r} in {expr!r}")
+            raise CohortParseError(
+                f"expected cohort name, got {t!r}", expr, at)
         return CohortRef(t)
 
     def parse_inter():
@@ -771,5 +804,6 @@ def parse_cohort_expr(expr: str) -> Union[CohortRef, CohortCombine]:
 
     node = parse_union()
     if pos[0] != len(toks):
-        raise ValueError(f"unexpected token {toks[pos[0]]!r} in {expr!r}")
+        raise CohortParseError(
+            f"unexpected token {peek()!r}", expr, here())
     return node

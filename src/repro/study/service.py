@@ -178,15 +178,22 @@ class ServiceStats:
 
 @dataclasses.dataclass
 class QueryTicket:
-    """One submitted study: filled in as it moves queued -> done/failed."""
+    """One submitted study: filled in as it moves queued -> done/failed.
+
+    ``wire=True`` marks tickets that entered through the declarative wire
+    path (``submit_spec``): their failures are always *structured* — any
+    exception class maps to ``status == "invalid"`` with ``SPEC-nnn``/
+    ``SPnnn`` error codes, and ``wire_payload()`` renders the ticket as the
+    service's JSON response (a traceback never reaches a tenant)."""
 
     tenant: str
-    study: Study
+    study: Optional[Study]
     priority: int = 0
     seq: int = -1
     status: str = "queued"    # queued | rejected | invalid | done | failed
     result: Optional[StudyResult] = None
     error: Optional[BaseException] = None
+    wire: bool = False                # submitted as a spec via the wire path
     cache_hits: int = 0
     cache_misses: int = 0
     compiled: bool = False            # this query built a new executable
@@ -198,6 +205,45 @@ class QueryTicket:
         default=None, repr=False, compare=False)
     _cut_hashes: List[str] = dataclasses.field(
         default_factory=list, repr=False, compare=False)
+
+    def wire_payload(self) -> Dict[str, Any]:
+        """The ticket as a structured wire response.
+
+        ``done`` -> result summary (event/cohort counts, flow stages, cache
+        accounting); ``rejected``/``invalid``/``failed`` -> an ``errors``
+        list of ``{code, path|node, message, hint}`` entries
+        (``spec.error_payload``).  Exception *types* are mapped to stable
+        codes; messages of unexpected exceptions and tracebacks are never
+        included."""
+        if self.status == "queued":
+            return {"status": "queued", "seq": self.seq}
+        if self.status == "rejected":
+            return {"status": "rejected", "errors": [{
+                "code": "SPEC-429",
+                "message": "service queue is full; the query was not "
+                           "admitted",
+                "hint": "resubmit once in-flight queries drain"}]}
+        if self.status == "done" and self.result is not None:
+            r = self.result
+            payload: Dict[str, Any] = {
+                "status": "done",
+                "events": {k: int(t.count) for k, t in r.events.items()},
+                "cohorts": {k: int(c.subject_count())
+                            for k, c in r.cohorts.items()},
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "compiled": self.compiled,
+            }
+            if r.flow is not None:
+                payload["flow"] = [int(c.subject_count())
+                                   for c in r.flow.steps]
+            if r.features:
+                payload["features"] = sorted(r.features)
+            return payload
+        from repro.study.spec import error_payload
+        err = self.error if self.error is not None \
+            else RuntimeError("unresolved ticket")
+        return {"status": self.status, "errors": error_payload(err)}
 
 
 class _Count:
@@ -329,12 +375,12 @@ class CohortQueryService:
 
     # -- admission -----------------------------------------------------------
     def submit(self, study: Study, tenant: str = "default",
-               priority: int = 0) -> QueryTicket:
+               priority: int = 0, wire: bool = False) -> QueryTicket:
         """Queue a study for ``tenant``.  Returns its ticket immediately;
         the ticket resolves during ``step``/``drain``.  Over-depth queues
         reject (``status == "rejected"``)."""
         t = QueryTicket(tenant=tenant, study=study, priority=int(priority),
-                        seq=self._seq)
+                        seq=self._seq, wire=wire)
         self._seq += 1
         with self._lock:
             self.stats.tenant(tenant).submitted += 1
@@ -346,6 +392,43 @@ class CohortQueryService:
                                 outputs={},
                                 params={"queued": self._sched.queued()})
         return t
+
+    def submit_spec(self, spec: Any, tenant: str = "default",
+                    priority: int = 0) -> QueryTicket:
+        """Queue a declarative wire-format study spec (``study.spec``).
+
+        The spec validates and compiles *before* admission: a malformed
+        payload comes back immediately as an ``"invalid"`` ticket carrying
+        every ``SPEC-nnn`` finding (and counts into
+        ``stats.plans_rejected``), without consuming a queue slot.  A
+        compiling spec queues exactly like the equivalent Python-built
+        ``Study`` — same optimize -> analyze -> normalize admission, same
+        compiled-executable sharing, same subgraph cache, bit-identical
+        results — but its ticket is marked ``wire``: every later failure,
+        including ``SPnnn`` analyzer rejections and runtime surprises, is
+        rendered structurally by ``QueryTicket.wire_payload()``; no
+        exception class leaks a traceback to the tenant."""
+        from repro.study.spec import SpecValidationError, compile_spec
+
+        try:
+            study = compile_spec(spec)
+        except SpecValidationError as e:
+            t = QueryTicket(tenant=tenant, study=None,
+                            priority=int(priority), seq=self._seq, wire=True)
+            self._seq += 1
+            t.status = "invalid"
+            t.error = e
+            with self._lock:
+                ts = self.stats.tenant(tenant)
+                ts.submitted += 1
+                ts.invalid += 1
+                self.stats.plans_rejected += 1
+                self.log.record(
+                    op=f"service:invalid:{tenant}", inputs={}, outputs={},
+                    params={"errors": [str(i) for i in e.issues][:8]})
+            return t
+        return self.submit(study, tenant=tenant, priority=priority,
+                           wire=True)
 
     def step(self) -> int:
         """Admit one window of queued tickets (priority order, per-tenant
@@ -360,29 +443,8 @@ class CohortQueryService:
                 self.stats.tenant(tenant).admitted += 1
             try:
                 realize = self._submit_ticket(ticket)
-            except PlanValidationError as e:
-                # static analysis rejected the plan at admission — it never
-                # touched the compile cache; distinct from runtime failures
-                with self._lock:
-                    ticket.status = "invalid"
-                    ticket.error = e
-                    self.stats.tenant(tenant).invalid += 1
-                    self.stats.plans_rejected += 1
-                    self.log.record(
-                        op=f"service:invalid:{tenant}", inputs={},
-                        outputs={},
-                        params={"diagnostics":
-                                [str(d) for d in e.diagnostics
-                                 if d.severity == "error"][:8]})
-                self._release_cuts(ticket)
-                self._sched.release(tenant)
             except Exception as e:  # noqa: BLE001 — isolate tenant failures
-                with self._lock:
-                    ticket.status = "failed"
-                    ticket.error = e
-                    self.stats.tenant(tenant).failed += 1
-                    self.log.record(op=f"service:failed:{tenant}", inputs={},
-                                    outputs={}, params={"error": repr(e)})
+                self._resolve_failure(ticket, e)
                 self._release_cuts(ticket)
                 self._sched.release(tenant)
             else:
@@ -460,16 +522,47 @@ class CohortQueryService:
                 ticket.status = "done"
                 self.stats.tenant(ticket.tenant).completed += 1
         except Exception as e:  # noqa: BLE001 — isolate tenant failures
-            with self._lock:
-                ticket.status = "failed"
-                ticket.error = e
-                self.stats.tenant(ticket.tenant).failed += 1
-                self.log.record(op=f"service:failed:{ticket.tenant}",
-                                inputs={}, outputs={},
-                                params={"error": repr(e)})
+            self._resolve_failure(ticket, e)
         finally:
             self._release_cuts(ticket)
             self._sched.release(ticket.tenant)
+
+    def _resolve_failure(self, ticket: QueryTicket,
+                         e: BaseException) -> None:
+        """Resolve a ticket whose submit or realize stage threw.
+
+        ``PlanValidationError`` (admission-time static analysis) always maps
+        to ``"invalid"`` — it never touched the compile cache, distinct from
+        runtime failures.  Wire tickets map *every* exception to
+        ``"invalid"`` too: the wire contract is structured rejection with
+        stable codes (``QueryTicket.wire_payload``), never a leaked
+        traceback, and each counts into ``stats.plans_rejected``.  Python
+        tickets keep the legacy ``"failed"`` status with the exception
+        re-raisable from ``ticket.error``."""
+        invalid = ticket.wire or isinstance(e, PlanValidationError)
+        with self._lock:
+            ticket.error = e
+            ts = self.stats.tenant(ticket.tenant)
+            if invalid:
+                from repro.study.spec import error_payload
+
+                ticket.status = "invalid"
+                ts.invalid += 1
+                self.stats.plans_rejected += 1
+                self.log.record(
+                    op=f"service:invalid:{ticket.tenant}", inputs={},
+                    outputs={},
+                    params={"errors": [
+                        " ".join(str(d.get(k)) for k in
+                                 ("code", "node", "path", "message")
+                                 if d.get(k) is not None)
+                        for d in error_payload(e)][:8]})
+            else:
+                ticket.status = "failed"
+                ts.failed += 1
+                self.log.record(op=f"service:failed:{ticket.tenant}",
+                                inputs={}, outputs={},
+                                params={"error": repr(e)})
 
     def _release_cuts(self, ticket: QueryTicket) -> None:
         """Retire the ticket's in-flight cut registrations and wake waiters

@@ -1,0 +1,243 @@
+"""Declarative spec front end: exact round-trips onto the golden plans,
+golden spec files, the SPEC-nnn rejection matrix (one mutation per code),
+parser position info, and service ``submit_spec`` parity — the wire path
+must produce bit-identical results, identical cache behavior, and
+structured (never traceback) failures.
+
+    REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_spec.py
+"""
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.data import SyntheticConfig, generate_dcir
+from repro.study import (CohortQueryService, ServiceConfig, Study, col,
+                         compile_spec, spec_from_study, validate_spec)
+from repro.study.defects import golden_studies
+from repro.study.expr import CohortParseError, as_param, parse_cohort_expr
+from repro.study.fuzz import (MUTATIONS, gen_valid_spec, mutate_spec,
+                              results_equal)
+from repro.study.spec import (SPEC_CODES, SpecValidationError, error_payload,
+                              expr_dict_to_param, expr_to_dict)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+CFG = SyntheticConfig(n_patients=200, seed=7)
+
+
+@pytest.fixture(scope="module")
+def dcir():
+    return generate_dcir(CFG)
+
+
+def _wire_study():
+    """A spec-expressible study exercising every concept kind the fuzzer
+    generates: flatten, whitelist extract, filter, algebra, flow."""
+    from repro.core import DCIR_SCHEMA, drug_dispenses, medical_acts_dcir
+    return (Study(n_patients=CFG.n_patients)
+            .flatten(DCIR_SCHEMA)
+            .extract(drug_dispenses(codes=list(range(80))), name="drugs")
+            .extract(medical_acts_dcir(), name="acts")
+            .filter("acts", col("value") >= 120, name="acts_hi")
+            .patients("IR_BEN")
+            .cohort("base", "extract_patients")
+            .cohort("drugged", "drugs")
+            .cohort("final", "(drugged & base) - acts_hi")
+            .flow("base", "drugged", "final"))
+
+
+# ---------------------------------------------------------------------------
+# round-trip: Study -> spec -> Study rebuilds the identical plan
+# ---------------------------------------------------------------------------
+def test_round_trip_golden_plans():
+    for name, study in golden_studies().items():
+        spec = spec_from_study(study)
+        rebuilt = compile_spec(json.loads(json.dumps(spec)))  # via the wire
+        for eng in ("jnp", "pallas"):
+            assert (rebuilt.optimized_plan(predicate_engine=eng).key()
+                    == study.optimized_plan(predicate_engine=eng).key()), \
+                f"{name}/{eng}: spec round-trip changed the plan"
+        # the inverse is a fixpoint: re-exporting the rebuilt study is a
+        # no-op, so specs are stable artifacts, not drifting snapshots
+        assert spec_from_study(rebuilt) == spec
+
+
+def test_round_trip_property_fuzzed_specs():
+    rng = random.Random(42)
+    for _ in range(25):
+        spec = gen_valid_spec(rng)
+        assert validate_spec(spec) == []
+        study = compile_spec(spec)
+        spec2 = spec_from_study(study)
+        assert compile_spec(spec2).plan().key() == study.plan().key()
+        assert spec_from_study(compile_spec(spec2)) == spec2
+
+
+def test_spec_from_study_refuses_bound_tables(dcir):
+    s = Study(n_patients=10).source("T", dcir["IR_BEN"])
+    with pytest.raises(ValueError, match="data, not declarations"):
+        spec_from_study(s)
+
+
+def test_expr_wire_round_trip():
+    exprs = [
+        (col("a") + 1 < col("b") * 2) & ~col("c").isin([1, 2, 3]),
+        col("x").is_null() | (col("y") != 0),
+    ]
+    for e in exprs:
+        p = as_param(e)
+        d = json.loads(json.dumps(expr_to_dict(p)))
+        assert expr_dict_to_param(d) == p
+
+
+# ---------------------------------------------------------------------------
+# golden spec files: the two example studies as public wire artifacts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["quickstart", "cohort_study"])
+def test_golden_spec_files(name):
+    spec = spec_from_study(golden_studies()[name])
+    path = os.path.join(GOLDEN_DIR, f"{name}_spec.json")
+    if os.environ.get("REGEN_GOLDENS"):
+        with open(path, "w") as f:
+            # NOT sort_keys: cohorts is an *ordered* mapping (declaration
+            # order is reference order); sorting would corrupt the artifact
+            json.dump(spec, f, indent=1)
+        return
+    if not os.path.exists(path):
+        pytest.fail(f"golden {name}_spec.json missing — regenerate with "
+                    f"REGEN_GOLDENS=1")
+    with open(path) as f:
+        golden = json.load(f)
+    assert json.loads(json.dumps(spec)) == golden, (
+        f"wire spec of {name} drifted from its golden; regenerate with "
+        f"REGEN_GOLDENS=1 and review the diff.")
+    # the golden file itself must stay compilable and clean
+    assert validate_spec(golden) == []
+
+
+# ---------------------------------------------------------------------------
+# rejection matrix: every SPEC code fires via its catalog mutation
+# ---------------------------------------------------------------------------
+def test_mutation_catalog_covers_every_validation_code():
+    validation_codes = {c for c in SPEC_CODES
+                        if c not in ("SPEC-429", "SPEC-900")}
+    assert {code for code, _ in MUTATIONS} == validation_codes
+
+
+@pytest.mark.parametrize("idx", range(len(MUTATIONS)))
+def test_rejection_matrix(idx):
+    rng = random.Random(idx)
+    code, mutated = mutate_spec(gen_valid_spec(rng), idx, rng)
+    issues = validate_spec(mutated)
+    assert any(i.code == code for i in issues), \
+        f"expected {code}, got {sorted({i.code for i in issues})}"
+    with pytest.raises(SpecValidationError) as ei:
+        compile_spec(mutated)
+    errs = error_payload(ei.value)
+    assert all(set(e) == {"code", "path", "message", "hint"} for e in errs)
+    json.dumps(errs)                               # wire-serializable
+
+
+def test_cohort_parse_error_position():
+    with pytest.raises(CohortParseError) as ei:
+        parse_cohort_expr("base & ( other")
+    e = ei.value
+    assert e.offset == len("base & ( other")       # where ')' was expected
+    assert "^" in str(e)
+    with pytest.raises(CohortParseError) as ei:
+        parse_cohort_expr("a & & b")
+    assert ei.value.offset == 4
+
+    spec = gen_valid_spec(random.Random(3))
+    spec["cohorts"]["bad"] = "base & & base"
+    (issue,) = [i for i in validate_spec(spec) if i.code == "SPEC-012"]
+    assert issue.path == "cohorts.bad"
+    assert "offset 7" in issue.message and "^" in issue.message
+
+
+def test_error_payload_never_leaks_internals():
+    errs = error_payload(RuntimeError("secret /etc/shadow state"))
+    assert [e["code"] for e in errs] == ["SPEC-900"]
+    assert "secret" not in json.dumps(errs)
+    assert "RuntimeError" in errs[0]["message"]    # the type is public
+
+
+# ---------------------------------------------------------------------------
+# service wire path: submit_spec parity + structured rejection
+# ---------------------------------------------------------------------------
+def test_submit_spec_parity_with_python_study(dcir):
+    study = _wire_study()
+    spec = json.loads(json.dumps(spec_from_study(study)))
+
+    py_svc = CohortQueryService(dict(dcir), config=ServiceConfig())
+    t_py = py_svc.submit(_wire_study())
+    py_svc.drain()
+    wire_svc = CohortQueryService(dict(dcir), config=ServiceConfig())
+    t_wire = wire_svc.submit_spec(spec)
+    wire_svc.drain()
+
+    assert t_py.status == "done" and t_wire.status == "done", \
+        (t_py.error, t_wire.error)
+    assert results_equal(t_py.result, t_wire.result) is None
+    # identical plans => identical cache/compile behavior on fresh services
+    assert (t_wire.cache_hits, t_wire.cache_misses) == \
+        (t_py.cache_hits, t_py.cache_misses)
+    assert wire_svc.stats.compile_count == py_svc.stats.compile_count
+
+    payload = t_wire.wire_payload()
+    assert payload["status"] == "done"
+    assert payload["cohorts"]["final"] == \
+        t_py.result.cohorts["final"].subject_count()
+    assert payload["flow"] == [r["subjects"]
+                               for r in t_py.result.flow.flowchart()]
+    json.dumps(payload)
+
+
+def test_submit_spec_rejects_with_structured_errors(dcir):
+    svc = CohortQueryService(dict(dcir))
+    spec = gen_valid_spec(random.Random(5))
+    spec["cohorts"]["bad"] = "base & ("
+    ticket = svc.submit_spec(spec, tenant="t1")
+    assert ticket.status == "invalid"
+    assert svc.stats.plans_rejected == 1
+    payload = ticket.wire_payload()
+    assert payload["status"] == "invalid"
+    assert any(e["code"] == "SPEC-012" for e in payload["errors"])
+    assert all("Traceback" not in json.dumps(e) for e in payload["errors"])
+    assert any(e["op"] == "service:invalid:t1" for e in svc.log.entries)
+    # an invalid spec consumes no queue slot and never reaches the planner
+    assert svc.step() == 0
+
+
+def test_submit_spec_analyzer_rejection_is_structured(dcir):
+    svc = CohortQueryService(dict(dcir))
+    spec = gen_valid_spec(random.Random(6))
+    ex = spec["concepts"][0]["extractor"]
+    ex["where"] = {"op": "and",                     # provably always-false
+                   "lhs": {"op": "cmp", "cmp": "<",
+                           "lhs": {"op": "col", "name": "quantity"},
+                           "rhs": {"op": "lit", "value": 2}},
+                   "rhs": {"op": "cmp", "cmp": ">",
+                           "lhs": {"op": "col", "name": "quantity"},
+                           "rhs": {"op": "lit", "value": 30}}}
+    assert validate_spec(spec) == []               # structurally fine
+    ticket = svc.submit_spec(spec, tenant="t2")
+    svc.drain()
+    assert ticket.status == "invalid"
+    assert svc.stats.plans_rejected == 1
+    payload = ticket.wire_payload()
+    assert any(e["code"] == "SP003" for e in payload["errors"])
+    json.dumps(payload)
+
+
+def test_submit_spec_full_queue_is_wire_structured(dcir):
+    svc = CohortQueryService(dict(dcir),
+                             config=ServiceConfig(max_queue=0))
+    ticket = svc.submit_spec(spec_from_study(_wire_study()))
+    assert ticket.status == "rejected"
+    payload = ticket.wire_payload()
+    assert payload["status"] == "rejected"
+    assert [e["code"] for e in payload["errors"]] == ["SPEC-429"]

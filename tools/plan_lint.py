@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """plan-lint — CI gate running the static plan verifier over the goldens.
 
-Two halves, both must pass:
+Three halves, all must pass:
 
 1. **Golden plans are diagnostic-clean.**  The two example studies
    (quickstart, cohort_study — the same shapes ``tests/goldens`` pins) are
@@ -10,7 +10,12 @@ Two halves, both must pass:
    demotion, SP010 unaligned concat) are reported but allowed — they flag
    performance texture, not defects.
 
-2. **Seeded defects all fire.**  Every fixture in ``study/defects.py``
+2. **Golden wire specs compile clean.**  Every ``tests/goldens/*_spec.json``
+   artifact must pass strict SPEC validation, compile onto a Study, and
+   produce a diagnostic-clean optimized plan under both predicate engines —
+   the public spec artifacts stay as trustworthy as the Python goldens.
+
+3. **Seeded defects all fire.**  Every fixture in ``study/defects.py``
    (one per SPnnn code) must produce exactly its expected diagnostic —
    proving the analyzer still detects each defect class end to end.
 
@@ -19,10 +24,17 @@ Exit: 0 clean, 1 violations.
 """
 from __future__ import annotations
 
+import glob
+import json
+import os
 import sys
 
 from repro.study.analyze import DIAGNOSTIC_CODES, analyze, format_diagnostics
 from repro.study.defects import all_defects, golden_studies
+from repro.study.spec import compile_spec, validate_spec
+
+GOLDEN_SPEC_GLOB = os.path.join(os.path.dirname(__file__), "..", "tests",
+                                "goldens", "*_spec.json")
 
 
 def lint_goldens() -> int:
@@ -45,6 +57,37 @@ def lint_goldens() -> int:
     return failures
 
 
+def lint_golden_specs() -> int:
+    paths = sorted(glob.glob(GOLDEN_SPEC_GLOB))
+    if not paths:
+        print("  FAIL no tests/goldens/*_spec.json artifacts found")
+        return 1
+    failures = 0
+    for path in paths:
+        name = os.path.basename(path)
+        with open(path) as f:
+            spec = json.load(f)
+        issues = validate_spec(spec)
+        if issues:
+            print(f"  FAIL {name}: {len(issues)} validation issue(s)")
+            for i in issues:
+                print(f"       {i}")
+            failures += 1
+            continue
+        study = compile_spec(spec)
+        for engine in ("pallas", "jnp"):
+            plan = study.optimized_plan(predicate_engine=engine)
+            diags = analyze(plan, n_patients=study.n_patients)
+            bad = [d for d in diags if d.severity in ("error", "warn")]
+            status = "FAIL" if bad else "ok"
+            print(f"  {status:4s} {name:24s} engine={engine:6s} "
+                  f"{len(plan.nodes):3d} nodes  {len(bad)} error/warn")
+            if bad:
+                print(format_diagnostics(bad))
+                failures += 1
+    return failures
+
+
 def lint_defects() -> int:
     failures = 0
     for code, plan, kwargs in all_defects():
@@ -63,12 +106,14 @@ def lint_defects() -> int:
 def main() -> int:
     print("golden plans (must be free of error/warn diagnostics):")
     f1 = lint_goldens()
+    print("golden wire specs (must validate, compile, and analyze clean):")
+    f3 = lint_golden_specs()
     print(f"seeded defects (each of the {len(DIAGNOSTIC_CODES)} codes "
           f"must fire on its fixture):")
     f2 = lint_defects()
-    if f1 or f2:
+    if f1 or f2 or f3:
         print(f"\nplan-lint: FAILED ({f1} dirty golden plan(s), "
-              f"{f2} silent defect(s))")
+              f"{f3} dirty golden spec(s), {f2} silent defect(s))")
         return 1
     print("plan-lint: OK")
     return 0
