@@ -408,11 +408,13 @@ class CohortQueryService:
         including ``SPnnn`` analyzer rejections and runtime surprises, is
         rendered structurally by ``QueryTicket.wire_payload()``; no
         exception class leaks a traceback to the tenant."""
-        from repro.study.spec import SpecValidationError, compile_spec
+        from repro.study.spec import compile_spec, error_payload
 
         try:
             study = compile_spec(spec)
-        except SpecValidationError as e:
+        except Exception as e:  # noqa: BLE001 — wire admission never raises:
+            # SpecValidationError carries its SPEC-nnn issues; anything else
+            # renders as a single SPEC-900 entry via error_payload.
             t = QueryTicket(tenant=tenant, study=None,
                             priority=int(priority), seq=self._seq, wire=True)
             self._seq += 1
@@ -425,7 +427,11 @@ class CohortQueryService:
                 self.stats.plans_rejected += 1
                 self.log.record(
                     op=f"service:invalid:{tenant}", inputs={}, outputs={},
-                    params={"errors": [str(i) for i in e.issues][:8]})
+                    params={"errors": [
+                        " ".join(str(d.get(k)) for k in
+                                 ("code", "node", "path", "message")
+                                 if d.get(k) is not None)
+                        for d in error_payload(e)][:8]})
             return t
         return self.submit(study, tenant=tenant, priority=priority,
                            wire=True)

@@ -517,6 +517,13 @@ def validate_spec(spec: Any) -> List[SpecIssue]:
                     not all(_is_str(k) for k in kw):
                 iss.add("SPEC-005", f"{path}.kwargs",
                         "kwargs must be an object with string keys")
+            else:
+                clash = sorted(set(kw) & {"fn", "inputs", "name"})
+                if clash:
+                    iss.add("SPEC-005", f"{path}.kwargs",
+                            f"kwargs may not override reserved "
+                            f"parameter(s): {', '.join(clash)}",
+                            "set fn/inputs/name on the concept itself")
             declare(c.get("name", fn if _is_str(fn) else None),
                     "events", path)
         elif kind == "concat":
@@ -530,13 +537,16 @@ def validate_spec(spec: Any) -> List[SpecIssue]:
                                 ("table", "events"))
             declare(c.get("name"), "events", path)
         elif kind == "filter":
-            require_ref(c.get("source"), f"{path}.source",
-                        ("table", "events"))
+            src = c.get("source")
+            require_ref(src, f"{path}.source", ("table", "events"))
             _check_expr(c["where"], f"{path}.where", iss)
             nm = c.get("name")
-            if nm is None and _is_str(c.get("source")):
-                nm = f"{c['source']}_filtered"
-            src_kind = defined.get(c.get("source"), "events")
+            if nm is None and _is_str(src):
+                nm = f"{src}_filtered"
+            # src may be any JSON value (require_ref only records the
+            # issue); hash it only when it is a usable key.
+            src_kind = defined.get(src, "events") if _is_str(src) \
+                else "events"
             declare(nm, src_kind, path)
 
     # -- cohorts ------------------------------------------------------------
@@ -603,6 +613,14 @@ def validate_spec(spec: Any) -> List[SpecIssue]:
         if not isinstance(kw, Mapping) or not all(_is_str(k) for k in kw):
             iss.add("SPEC-005", f"{path}.kwargs",
                     "kwargs must be an object with string keys")
+        else:
+            clash = sorted(set(kw) & {"name", "cohort", "kind",
+                                      "feature_kind", "patients"})
+            if clash:
+                iss.add("SPEC-005", f"{path}.kwargs",
+                        f"kwargs may not override reserved "
+                        f"parameter(s): {', '.join(clash)}",
+                        "set them on the output directive itself")
         declare(o.get("name"), "feature", path)
     return iss.items
 

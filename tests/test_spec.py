@@ -212,6 +212,65 @@ def test_submit_spec_rejects_with_structured_errors(dcir):
     assert svc.step() == 0
 
 
+def test_validate_spec_never_raises_on_unhashable_values(dcir):
+    # a filter source may be any JSON value; unhashable ones (list/object)
+    # must surface as findings, never a TypeError out of validate_spec
+    where = {"op": "cmp", "cmp": "<",
+             "lhs": {"op": "col", "name": "start"},
+             "rhs": {"op": "lit", "value": 1}}
+    for src in (["a"], {"a": 1}):
+        spec = {"spec_version": 1, "n_patients": 4,
+                "concepts": [{"kind": "filter", "source": src,
+                              "where": where}]}
+        issues = validate_spec(spec)
+        assert any(i.code == "SPEC-005" for i in issues)
+    svc = CohortQueryService(dict(dcir))
+    ticket = svc.submit_spec(
+        {"spec_version": 1, "n_patients": 4,
+         "concepts": [{"kind": "filter", "source": ["a"],
+                       "where": where}]}, tenant="t9")
+    assert ticket.status == "invalid"
+    json.dumps(ticket.wire_payload())
+
+
+def test_reserved_kwargs_are_validation_findings():
+    # kwargs keys that collide with builder parameters would raise
+    # TypeError inside compile; the validator must catch them first
+    spec = {"spec_version": 1, "n_patients": 8,
+            "concepts": [
+                {"kind": "patients", "name": "p"},
+                {"kind": "transform", "fn": "exposures", "inputs": ["p"],
+                 "kwargs": {"name": "boom", "fn": "x"}}],
+            "cohorts": {"base": "p"},
+            "outputs": [{"kind": "featurize", "name": "f", "cohort": "base",
+                         "kwargs": {"cohort": "base", "kind": "tokens"}}]}
+    hits = {(i.code, i.path) for i in validate_spec(spec)}
+    assert ("SPEC-005", "concepts[1].kwargs") in hits
+    assert ("SPEC-005", "outputs[0].kwargs") in hits
+    with pytest.raises(SpecValidationError):
+        compile_spec(spec)
+
+
+def test_submit_spec_never_leaks_unexpected_exceptions(dcir, monkeypatch):
+    # even a non-SpecValidationError out of compile_spec must resolve as a
+    # structured SPEC-900 ticket, not escape the wire entry point
+    import repro.study.spec as specmod
+
+    def kaboom(_spec):
+        raise RuntimeError("secret internals")
+
+    monkeypatch.setattr(specmod, "compile_spec", kaboom)
+    svc = CohortQueryService(dict(dcir))
+    ticket = svc.submit_spec({"spec_version": 1, "n_patients": 4},
+                             tenant="t3")
+    assert ticket.status == "invalid"
+    assert svc.stats.plans_rejected == 1
+    payload = ticket.wire_payload()
+    assert [e["code"] for e in payload["errors"]] == ["SPEC-900"]
+    assert "secret" not in json.dumps(payload)
+    assert any(e["op"] == "service:invalid:t3" for e in svc.log.entries)
+
+
 def test_submit_spec_analyzer_rejection_is_structured(dcir):
     svc = CohortQueryService(dict(dcir))
     spec = gen_valid_spec(random.Random(6))
